@@ -1,0 +1,28 @@
+"""Paper Table 1: benchmark graph statistics (nodes, edges, Phi lower bound,
+weight distribution moments) for the CPU-scaled graph families."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import benchmark_graphs, emit, true_diameter
+
+
+def run(scale: float = 1.0):
+    rows = []
+    for name, g in benchmark_graphs(scale).items():
+        w = g.weight.astype(np.float64)
+        rows.append({
+            "graph": name,
+            "nodes": g.n_nodes,
+            "edges": g.n_edges // 2,      # undirected pairs (Table 1 style)
+            "phi": true_diameter(g),
+            "w_mean": round(float(w.mean()), 1),
+            "w_std": round(float(w.std()), 1),
+            "w_max": int(w.max()),
+        })
+    emit("table1_graphs", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

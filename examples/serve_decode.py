@@ -1,0 +1,11 @@
+"""Serve a small model with batched requests (prefill + KV-cache decode).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "mixtral-8x7b", "--smoke",
+            "--batch", "4", "--prompt-len", "24", "--gen", "12"]
+from repro.launch.serve import main
+
+raise SystemExit(main())

@@ -1,0 +1,50 @@
+"""Full-graph GNN training on a synthetic citation-style graph, using the
+paper's decomposition as the locality-aware partitioner (the engine feature
+reused as a systems tool).
+
+  PYTHONPATH=src python examples/train_gnn.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ShapeSpec, TrainConfig
+from repro.config.registry import get_arch
+from repro.core import cluster
+from repro.data.pipeline import gnn_full_graph_batch
+from repro.graph.partition import apply_partition, cluster_partition, cut_fraction
+from repro.graph.structures import EdgeList
+from repro.models import gnn as gnn_mod
+from repro.optim import adamw
+
+cfg = get_arch("gcn-cora", smoke=True)
+shape = ShapeSpec(name="d", kind="full_graph", n_nodes=1000, n_edges=5000,
+                  d_feat=64)
+g = gnn_full_graph_batch(cfg, shape, seed=0, n_classes=cfg.d_out)
+
+# --- the paper's technique as a partitioner -------------------------------
+el = EdgeList(shape.n_nodes, g["src"], g["dst"],
+              np.ones(len(g["src"]), np.int32))
+dec = cluster(el, tau=16, seed=0)
+perm = cluster_partition(dec.final_c, n_devices=4)
+el2, inv = apply_partition(el, perm)
+print(f"edge-cut at 4 devices: naive {cut_fraction(el, 4):.3f} -> "
+      f"cluster-partitioned {cut_fraction(el2, 4):.3f}")
+
+graph = {k: jnp.asarray(v) for k, v in g.items()}
+params = gnn_mod.init_gnn(cfg, shape.d_feat, jax.random.PRNGKey(0))
+opt = adamw.init_state(params)
+tc = TrainConfig(lr=5e-3, warmup=5)
+
+@jax.jit
+def step(p, o, gr):
+    loss, grads = jax.value_and_grad(gnn_mod.node_classification_loss)(p, gr, cfg)
+    p, o, _ = adamw.apply_updates(p, o, grads, tc)
+    return p, o, loss
+
+for i in range(60):
+    params, opt, loss = step(params, opt, graph)
+    if i % 10 == 0:
+        print(f"step {i:3d}  loss {float(loss):.4f}")
+print(f"final loss {float(loss):.4f}")
+assert float(loss) < 1.5

@@ -1,0 +1,86 @@
+"""Train a ~100M-param LM for a few hundred steps with checkpoint/restart.
+
+Architecture: gemma2-family block (alternating local/global attention,
+softcaps) at ~110M params. Kill it mid-run and re-invoke -- it resumes from
+the last checkpoint and replays the data stream from its cursor.
+
+  PYTHONPATH=src python examples/train_lm.py            # 300 steps (~CPU hours)
+  PYTHONPATH=src python examples/train_lm.py --steps 5  # quick sanity
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.config.base import ShapeSpec, TrainConfig, TransformerConfig
+from repro.data.pipeline import DataCursor, LMTokenPipeline
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.runtime.fault import PreemptionGuard, StragglerMonitor
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq-len", type=int, default=128)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_example_lm100m")
+args = ap.parse_args()
+
+cfg = TransformerConfig(
+    name="gemma2-110m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=6,
+    d_head=64, d_ff=2304, vocab_size=32000,
+    sliding_window=64, local_global_alternating=True,
+    attn_logit_softcap=50.0, final_logit_softcap=30.0, act="gelu",
+    tie_embeddings=True, dtype="float32",
+)
+n_params = cfg.param_count()
+print(f"model: {n_params/1e6:.0f}M params")
+assert 80e6 < n_params < 150e6
+
+tc = TrainConfig(lr=6e-4, warmup=20, checkpoint_dir=args.ckpt_dir)
+shape = ShapeSpec(name="ex", kind="train", seq_len=args.seq_len,
+                  global_batch=args.batch)
+pipe = LMTokenPipeline(cfg, shape, seed=0)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+opt = adamw.init_state(params)
+cursor = DataCursor()
+
+if ckpt.latest_step(args.ckpt_dir) is not None:
+    like = {"params": params, "m": opt.m, "v": opt.v}
+    restored, extra = ckpt.restore(args.ckpt_dir, like)
+    params, opt = restored["params"], adamw.AdamWState(
+        m=restored["m"], v=restored["v"],
+        step=jnp.int32(extra.get("opt_step", 0)))
+    cursor = DataCursor.from_dict(extra.get("cursor", {}))
+    print(f"resumed from step {cursor.step}")
+
+
+@jax.jit
+def step_fn(p, o, b):
+    loss, g = jax.value_and_grad(T.lm_loss)(p, b, cfg)
+    p, o, stats = adamw.apply_updates(p, o, g, tc, total_steps=args.steps)
+    return p, o, loss, stats
+
+
+mon = StragglerMonitor()
+with PreemptionGuard() as guard:
+    while cursor.step < args.steps:
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(cursor).items()}
+        t0 = time.time()
+        params, opt, loss, stats = step_fn(params, opt, batch)
+        jax.block_until_ready(loss)
+        mon.record(cursor.step, time.time() - t0)
+        cursor.step += 1
+        if cursor.step % 10 == 0 or cursor.step <= 3:
+            print(f"step {cursor.step:4d}  loss {float(loss):.4f}  "
+                  f"({args.batch * args.seq_len / (time.time() - t0):.0f} tok/s)")
+        if cursor.step % 50 == 0 or guard.should_stop:
+            ckpt.save(args.ckpt_dir, cursor.step,
+                      {"params": params, "m": opt.m, "v": opt.v},
+                      extra={"cursor": cursor.as_dict(),
+                             "opt_step": int(opt.step)})
+        if guard.should_stop:
+            print("preempted -- checkpointed, exiting")
+            break
+print("done")

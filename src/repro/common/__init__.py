@@ -1,0 +1,22 @@
+"""Shared low-level utilities: dtypes, padding, timing, logging."""
+from repro.common.util import (
+    ceil_div,
+    pad_to_multiple,
+    pad_axis_to,
+    next_multiple,
+    tree_size_bytes,
+    tree_num_params,
+    Timer,
+    get_logger,
+)
+
+__all__ = [
+    "ceil_div",
+    "pad_to_multiple",
+    "pad_axis_to",
+    "next_multiple",
+    "tree_size_bytes",
+    "tree_num_params",
+    "Timer",
+    "get_logger",
+]

@@ -1,0 +1,34 @@
+from repro.config.base import (
+    ArchConfig,
+    TransformerConfig,
+    MoEConfig,
+    GNNConfig,
+    RecsysConfig,
+    GraphEngineConfig,
+    ShapeSpec,
+    MeshConfig,
+    TrainConfig,
+    LM_SHAPES,
+    GNN_SHAPES,
+    RECSYS_SHAPES,
+)
+from repro.config.registry import register_arch, get_arch, list_archs, arch_shapes
+
+__all__ = [
+    "ArchConfig",
+    "TransformerConfig",
+    "MoEConfig",
+    "GNNConfig",
+    "RecsysConfig",
+    "GraphEngineConfig",
+    "ShapeSpec",
+    "MeshConfig",
+    "TrainConfig",
+    "LM_SHAPES",
+    "GNN_SHAPES",
+    "RECSYS_SHAPES",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+    "arch_shapes",
+]

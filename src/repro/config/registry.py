@@ -1,0 +1,58 @@
+"""Architecture registry: maps ``--arch`` ids to config factories.
+
+Importing ``repro.configs`` registers all assigned architectures. Factories are
+lazy so importing the registry never builds big configs eagerly.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Tuple
+
+from repro.config.base import ArchConfig, ShapeSpec, shapes_for_family
+
+_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+_SMOKE_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+
+# arch-id -> module under repro.configs that registers it
+_ARCH_MODULES = {
+    "gemma2-9b": "gemma2_9b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "gcn-cora": "gcn_cora",
+    "gatedgcn": "gatedgcn",
+    "meshgraphnet": "meshgraphnet",
+    "equiformer-v2": "equiformer_v2",
+    "xdeepfm": "xdeepfm",
+    "paper-graph": "paper_graph",
+}
+
+
+def register_arch(name: str, factory: Callable[[], ArchConfig], smoke: Callable[[], ArchConfig]) -> None:
+    _REGISTRY[name] = factory
+    _SMOKE_REGISTRY[name] = smoke
+
+
+def _ensure_loaded(name: str) -> None:
+    if name in _REGISTRY:
+        return
+    mod = _ARCH_MODULES.get(name)
+    if mod is None:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_arch(name: str, smoke: bool = False) -> ArchConfig:
+    _ensure_loaded(name)
+    reg = _SMOKE_REGISTRY if smoke else _REGISTRY
+    return reg[name]()
+
+
+def list_archs() -> Tuple[str, ...]:
+    return tuple(sorted(_ARCH_MODULES))
+
+
+def arch_shapes(name: str) -> Tuple[ShapeSpec, ...]:
+    cfg = get_arch(name)
+    return shapes_for_family(cfg.family)

@@ -1,0 +1,5 @@
+"""One module per assigned architecture (+ the paper's own engine config).
+
+Importing a module registers its full + smoke factories with the registry;
+`repro.config.registry.get_arch(name)` lazy-imports on demand.
+"""

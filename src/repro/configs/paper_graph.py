@@ -1,0 +1,17 @@
+"""paper-graph: the paper's own decomposition/diameter engine as an arch.
+Defaults = the paper's experimental choices (CLUSTER, stop variant,
+Delta_init = avg edge weight, quotient ~ n/1000)."""
+from repro.config.base import GraphEngineConfig
+from repro.config.registry import register_arch
+
+
+def full() -> GraphEngineConfig:
+    return GraphEngineConfig(name="paper-graph")
+
+
+def smoke() -> GraphEngineConfig:
+    return GraphEngineConfig(name="paper-graph-smoke", tau_fraction=2e-2,
+                             max_stages=16)
+
+
+register_arch("paper-graph", full, smoke)

@@ -1,0 +1,34 @@
+"""The paper's contribution: weighted graph decomposition + diameter approx."""
+from repro.core.state import EngineState, init_state, INF
+from repro.core.delta_growing import growing_step, partial_growth, edge_candidates
+from repro.core.cluster import cluster, cluster2, Decomposition
+from repro.core.quotient import build_quotient, quotient_diameter, QuotientGraph
+from repro.core.diameter import approximate_diameter, DiameterEstimate, tau_for
+from repro.core.sssp import (
+    bellman_ford,
+    delta_stepping,
+    diameter_2approx_sssp,
+    farthest_point_lower_bound,
+)
+
+__all__ = [
+    "EngineState",
+    "init_state",
+    "INF",
+    "growing_step",
+    "partial_growth",
+    "edge_candidates",
+    "cluster",
+    "cluster2",
+    "Decomposition",
+    "build_quotient",
+    "quotient_diameter",
+    "QuotientGraph",
+    "approximate_diameter",
+    "DiameterEstimate",
+    "tau_for",
+    "bellman_ford",
+    "delta_stepping",
+    "diameter_2approx_sssp",
+    "farthest_point_lower_bound",
+]

@@ -1,0 +1,124 @@
+"""The Delta-growing step (paper Section 3) and the PartialGrowth loop.
+
+One growing step = one relaxation superstep over all edges:
+
+  for each edge (u, v):
+    if u is a *relay* (covered in a previous stage): the edge stands in for
+      the contracted edge (c_u, v) with rescaled weight w + offset_u; since
+      centers always have in-stage d = 0, the candidate is just the clamped
+      rescaled weight.
+    else (u live this stage): classic Bellman-Ford candidate d_u + w,
+      admissible when d_u < Delta (active) and w < Delta (light edge).
+
+  per destination v (uncovered, non-center): lexicographic (d, c) segment-min
+  with a third pass carrying the realized original-graph path weight.
+
+The PartialGrowth stopping rule (paper + Section 5 experiments):
+  repeat until no state updated            ("complete" variant)
+         or |{d < Delta}| >= target/2      ("stop" variant)
+         or k == num_it                    (2n/tau cap; never hit in practice)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import INF, EngineState
+from repro.graph.segment_ops import segment_min_triple
+
+
+class GrowthStats(NamedTuple):
+    steps: jnp.ndarray          # growing steps executed in this call
+    reached: jnp.ndarray        # |{uncovered non-center: d < Delta}|
+    changed_last: jnp.ndarray   # whether the final step still changed state
+
+
+def edge_candidates(
+    state: EngineState,
+    src: jnp.ndarray,
+    weight: jnp.ndarray,
+    delta: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-edge (cand_d, cand_c, cand_pathw); INF where inadmissible."""
+    relay = state.covered[src]
+    # relay branch: contracted edge (final_c[src], v), rescaled + clamped >= 0
+    w_red = jnp.maximum(weight + state.offset[src], 0)
+    relay_ok = relay & (w_red < delta)
+    # live branch
+    d_src = state.d[src]
+    live_ok = (~relay) & (d_src < delta) & (weight < delta)
+    d_safe = jnp.where(live_ok, d_src, 0)
+
+    cand_d = jnp.where(relay_ok, w_red, jnp.where(live_ok, d_safe + weight, INF))
+    cand_c = jnp.where(relay_ok, state.final_c[src], jnp.where(live_ok, state.c[src], INF))
+    p_src = jnp.where(relay_ok, state.final_pathw[src], jnp.where(live_ok, state.pathw[src], 0))
+    p_safe = jnp.where(p_src >= INF - jnp.int32(2**30), jnp.int32(0), p_src)  # guard
+    cand_p = jnp.where(relay_ok | live_ok, p_safe + weight, INF)
+    return cand_d, cand_c, cand_p
+
+
+def growing_step(
+    state: EngineState,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    weight: jnp.ndarray,
+    delta: jnp.ndarray,
+    n_nodes: int,
+) -> Tuple[EngineState, jnp.ndarray]:
+    """One Delta-growing step. Returns (new_state, any_change)."""
+    cand_d, cand_c, cand_p = edge_candidates(state, src, weight, delta)
+    d_min, c_min, p_min = segment_min_triple(cand_d, cand_c, cand_p, dst, n_nodes)
+
+    # strict improvement only (paper: "if d_v > d_u + w(u,v)"), receivers are
+    # uncovered non-centers; centers are also protected by d = 0 minimality.
+    recv = (~state.covered) & (~state.is_center)
+    upd = recv & (d_min < state.d)
+    new = state._replace(
+        d=jnp.where(upd, d_min, state.d),
+        c=jnp.where(upd, c_min, state.c),
+        pathw=jnp.where(upd, p_min, state.pathw),
+    )
+    return new, jnp.any(upd)
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "variant"))
+def partial_growth(
+    state: EngineState,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    weight: jnp.ndarray,
+    delta: jnp.ndarray,
+    half_target: jnp.ndarray,
+    num_it: jnp.ndarray,
+    n_nodes: int,
+    variant: str = "stop",
+) -> Tuple[EngineState, GrowthStats]:
+    """Paper's PartialGrowth(G, X, Delta, num_it) as a lax.while_loop.
+
+    ``half_target``: |uncovered at stage start| / 2 — the coverage goal.
+    ``variant``: "stop" halts once the goal is met; "complete" runs to
+    quiescence (paper Table 2 compares both).
+    """
+
+    def reached_count(s: EngineState) -> jnp.ndarray:
+        return jnp.sum((~s.covered) & (~s.is_center) & (s.d < delta))
+
+    def cond(carry):
+        s, k, changed = carry
+        more = changed & (k < num_it)
+        if variant == "stop":
+            more = more & (reached_count(s) < half_target)
+        return more
+
+    def body(carry):
+        s, k, _ = carry
+        s2, ch = growing_step(s, src, dst, weight, delta, n_nodes)
+        return (s2, k + 1, ch)
+
+    init = (state, jnp.int32(0), jnp.bool_(True))
+    final, k, changed = jax.lax.while_loop(cond, body, init)
+    stats = GrowthStats(steps=k, reached=reached_count(final), changed_last=changed)
+    return final, stats

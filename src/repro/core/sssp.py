@@ -1,0 +1,143 @@
+"""SSSP baselines (paper Section 5 competitor + Table 1 lower bounds).
+
+- ``bellman_ford``: the natural parallel Bellman-Ford (SSSP-BF). Each
+  superstep relaxes every edge; the superstep count is the competitor's
+  round complexity in the MR model (the quantity CLUSTER beats).
+- ``delta_stepping``: Meyer & Sanders bucketed SSSP. The paper notes that on
+  a round-driven platform the best setting degenerates to Delta = inf ==
+  Bellman-Ford; we implement real buckets anyway for completeness.
+- ``diameter_2approx_sssp``: 2-approximation from a random source.
+- ``farthest_point_lower_bound``: repeated SSSP hopping to the farthest node
+  (how the paper computes the Phi column of Table 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structures import EdgeList
+
+INF = jnp.int32(2**31 - 1)
+
+
+@dataclass
+class SSSPResult:
+    dist: np.ndarray
+    supersteps: int
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
+def _bf_loop(src, dst, w, d0, n_nodes: int):
+    def cond(carry):
+        _, changed, _ = carry
+        return changed
+
+    def body(carry):
+        d, _, k = carry
+        ds = d[src]
+        ok = ds < INF
+        cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, INF)
+        dmin = jax.ops.segment_min(cand, dst, num_segments=n_nodes)
+        upd = dmin < d
+        return jnp.where(upd, dmin, d), jnp.any(upd), k + 1
+
+    d, _, k = jax.lax.while_loop(cond, body, (d0, jnp.bool_(True), jnp.int32(0)))
+    return d, k
+
+
+def bellman_ford(edges: EdgeList, source: int) -> SSSPResult:
+    n = edges.n_nodes
+    d0 = jnp.full(n, INF, dtype=jnp.int32).at[source].set(0)
+    d, k = _bf_loop(jnp.asarray(edges.src), jnp.asarray(edges.dst), jnp.asarray(edges.weight), d0, n)
+    return SSSPResult(dist=np.asarray(d), supersteps=int(k))
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
+def _delta_stepping_loop(src, dst, w, d0, delta, n_nodes: int):
+    light = w < delta
+
+    def relax(d, mask_src):
+        ds = d[src]
+        ok = (ds < INF) & mask_src[src]
+        cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, INF)
+        dmin = jax.ops.segment_min(cand, dst, num_segments=n_nodes)
+        upd = dmin < d
+        return jnp.where(upd, dmin, d), jnp.any(upd)
+
+    def outer_cond(carry):
+        d, b, k = carry
+        # any unsettled node in a future bucket?
+        return jnp.any((d < INF) & (d >= b * delta)) & (k < jnp.int32(2**30))
+
+    def outer_body(carry):
+        d, b, k = carry
+        lo, hi = b * delta, (b + 1) * delta
+
+        def inner_cond(c):
+            _, changed, _ = c
+            return changed
+
+        def inner_body(c):
+            d_, _, k_ = c
+            in_bucket = (d_ >= lo) & (d_ < hi)
+            # light-edge relaxations from the current bucket
+            ds = d_[src]
+            ok = (ds < INF) & in_bucket[src] & light
+            cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, INF)
+            dmin = jax.ops.segment_min(cand, dst, num_segments=n_nodes)
+            upd = dmin < d_
+            return jnp.where(upd, dmin, d_), jnp.any(upd), k_ + 1
+
+        d, _, k = jax.lax.while_loop(inner_cond, inner_body, (d, jnp.bool_(True), k))
+        # one heavy pass for the settled bucket
+        in_bucket = (d >= lo) & (d < hi)
+        ds = d[src]
+        ok = (ds < INF) & in_bucket[src] & ~light
+        cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, INF)
+        dmin = jax.ops.segment_min(cand, dst, num_segments=n_nodes)
+        d = jnp.where(dmin < d, dmin, d)
+        return d, b + 1, k + 1
+
+    d, b, k = jax.lax.while_loop(outer_cond, outer_body, (d0, jnp.int32(0), jnp.int32(0)))
+    return d, k
+
+
+def delta_stepping(edges: EdgeList, source: int, delta: int) -> SSSPResult:
+    n = edges.n_nodes
+    d0 = jnp.full(n, INF, dtype=jnp.int32).at[source].set(0)
+    d, k = _delta_stepping_loop(
+        jnp.asarray(edges.src), jnp.asarray(edges.dst), jnp.asarray(edges.weight),
+        d0, jnp.int32(delta), n,
+    )
+    return SSSPResult(dist=np.asarray(d), supersteps=int(k))
+
+
+def diameter_2approx_sssp(edges: EdgeList, seed: int = 0) -> Tuple[int, int, int]:
+    """(lower_bound, upper_bound, supersteps) from one random-source SSSP."""
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(edges.n_nodes))
+    res = bellman_ford(edges, s)
+    finite = res.dist[res.dist < np.int32(INF)]
+    ecc = int(finite.max())
+    return ecc, 2 * ecc, res.supersteps
+
+
+def farthest_point_lower_bound(edges: EdgeList, rounds: int = 4, seed: int = 0) -> int:
+    """Paper Table 1's Phi column: repeated SSSP from the farthest node."""
+    rng = np.random.default_rng(seed)
+    s = int(rng.integers(edges.n_nodes))
+    best = 0
+    for _ in range(rounds):
+        res = bellman_ford(edges, s)
+        dist = np.where(res.dist < np.int32(INF), res.dist, -1)
+        far = int(dist.argmax())
+        best = max(best, int(dist.max()))
+        if far == s:
+            break
+        s = far
+    return best

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (
+    DataCursor, LMTokenPipeline, RecsysPipeline,
+    gnn_full_graph_batch, gnn_molecule_batch,
+)

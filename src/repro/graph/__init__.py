@@ -1,0 +1,26 @@
+from repro.graph.structures import EdgeList, DeviceGraph, INF_I32
+from repro.graph.generators import (
+    grid_mesh,
+    random_geometric,
+    random_connected,
+    rmat,
+    road_like,
+    social_like,
+    assign_weights,
+)
+from repro.graph.segment_ops import segment_min_pair, relax_candidates
+
+__all__ = [
+    "EdgeList",
+    "DeviceGraph",
+    "INF_I32",
+    "grid_mesh",
+    "random_geometric",
+    "rmat",
+    "road_like",
+    "random_connected",
+    "social_like",
+    "assign_weights",
+    "segment_min_pair",
+    "relax_candidates",
+]

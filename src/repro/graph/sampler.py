@@ -1,0 +1,101 @@
+"""Neighbor sampler for minibatch GNN training (minibatch_lg regime).
+
+Layer-wise fanout sampling (GraphSAGE style): given seed nodes, sample up to
+``fanout[l]`` in-neighbors per node per layer, building a block-bipartite
+subgraph per layer. Host-side numpy (the data-pipeline tier); outputs are
+fixed-shape padded arrays so the jitted train step never recompiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.graph.structures import EdgeList
+
+
+@dataclass
+class SampledBlock:
+    """One message-passing layer block: edges from src_ids -> dst slots."""
+
+    src_index: np.ndarray  # int32 [E_pad] indices into the layer's node table
+    dst_index: np.ndarray  # int32 [E_pad] indices into the next layer's node table
+    edge_mask: np.ndarray  # bool  [E_pad]
+    n_dst: int
+
+
+@dataclass
+class SampledBatch:
+    node_ids: np.ndarray  # int32 [N_pad] global ids of all nodes involved
+    node_mask: np.ndarray  # bool [N_pad]
+    blocks: List[SampledBlock]
+    seed_slots: np.ndarray  # int32 [B] positions of the seed nodes in node_ids
+
+
+class NeighborSampler:
+    def __init__(self, edges: EdgeList, fanout: Sequence[int], seed: int = 0):
+        e = edges.sorted_by_dst()
+        self.n = e.n_nodes
+        self.fanout = tuple(fanout)
+        # CSR over incoming edges
+        self.indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.add.at(self.indptr, e.dst + 1, 1)
+        np.cumsum(self.indptr, out=self.indptr)
+        self.srcs = e.src
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, seeds: np.ndarray) -> SampledBatch:
+        seeds = np.asarray(seeds, dtype=np.int32)
+        frontier = seeds
+        layers_nodes = [seeds]
+        raw_blocks: List[Tuple[np.ndarray, np.ndarray]] = []  # (src_gid, dst_gid)
+        for f in self.fanout:
+            lo = self.indptr[frontier]
+            hi = self.indptr[frontier + 1]
+            deg = (hi - lo).astype(np.int64)
+            k = np.minimum(deg, f)
+            # sample k[i] neighbors for node i (with replacement when deg>f
+            # would need rejection; replacement is standard for SAGE)
+            total = int(k.sum())
+            dst_rep = np.repeat(frontier, k)
+            base = np.repeat(lo, k)
+            offs = (self.rng.random(total) * np.repeat(np.maximum(deg, 1), k)).astype(np.int64)
+            src_g = self.srcs[base + offs]
+            raw_blocks.append((src_g.astype(np.int32), dst_rep.astype(np.int32)))
+            frontier = np.unique(src_g).astype(np.int32)
+            layers_nodes.append(frontier)
+
+        all_nodes = np.unique(np.concatenate(layers_nodes)).astype(np.int32)
+        lookup = {int(g): i for i, g in enumerate(all_nodes)}
+        remap = np.vectorize(lookup.__getitem__, otypes=[np.int32])
+
+        n_pad = _next_pow2(len(all_nodes))
+        node_ids = np.zeros(n_pad, dtype=np.int32)
+        node_ids[: len(all_nodes)] = all_nodes
+        node_mask = np.zeros(n_pad, dtype=bool)
+        node_mask[: len(all_nodes)] = True
+
+        blocks = []
+        max_e = max((len(s) for s, _ in raw_blocks), default=1)
+        e_pad = _next_pow2(max_e)
+        # reverse: blocks are applied deepest-first
+        for src_g, dst_g in reversed(raw_blocks):
+            si = np.zeros(e_pad, dtype=np.int32)
+            di = np.zeros(e_pad, dtype=np.int32)
+            m = np.zeros(e_pad, dtype=bool)
+            if len(src_g):
+                si[: len(src_g)] = remap(src_g)
+                di[: len(dst_g)] = remap(dst_g)
+                m[: len(src_g)] = True
+            blocks.append(SampledBlock(si, di, m, n_dst=n_pad))
+
+        seed_slots = remap(seeds)
+        return SampledBatch(node_ids, node_mask, blocks, seed_slots)
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < max(x, 1):
+        p <<= 1
+    return p

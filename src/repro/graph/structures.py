@@ -1,0 +1,173 @@
+"""Graph containers.
+
+``EdgeList`` is the host-side (numpy) representation: directed edge triples
+(src, dst, w). Undirected graphs store both directions. ``DeviceGraph`` is the
+device-ready representation used by the engine and the GNN models: edges sorted
+by destination, padded to a multiple of the edge-block size, plus CSR-style
+block pointers consumed by the Pallas relaxation kernel.
+
+All distances/weights are int32. INF_I32 marks "unreached"; weight arithmetic
+is guarded so INF never overflows (sources at INF are masked before the add).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import ceil_div, next_multiple
+
+INF_I32 = np.int32(2**31 - 1)
+# Largest admissible edge weight / path weight. Weights are "polynomial in n"
+# (paper §2); we enforce < 2^30 so d + w never overflows int32.
+MAX_WEIGHT = np.int32(2**30 - 1)
+
+
+@dataclass
+class EdgeList:
+    """Host-side directed edge list. Undirected graphs carry both directions."""
+
+    n_nodes: int
+    src: np.ndarray  # int32 [E]
+    dst: np.ndarray  # int32 [E]
+    weight: np.ndarray  # int32 [E]
+
+    def __post_init__(self) -> None:
+        self.src = np.asarray(self.src, dtype=np.int32)
+        self.dst = np.asarray(self.dst, dtype=np.int32)
+        self.weight = np.asarray(self.weight, dtype=np.int32)
+        if not (len(self.src) == len(self.dst) == len(self.weight)):
+            raise ValueError("src/dst/weight length mismatch")
+        if len(self.weight) and (self.weight.min() < 1 or self.weight.max() > MAX_WEIGHT):
+            raise ValueError("edge weights must be in [1, 2^30)")
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.src)
+
+    @staticmethod
+    def from_undirected(n_nodes: int, u: np.ndarray, v: np.ndarray, w: np.ndarray) -> "EdgeList":
+        """Symmetrize: every undirected {u,v} becomes u->v and v->u."""
+        src = np.concatenate([u, v]).astype(np.int32)
+        dst = np.concatenate([v, u]).astype(np.int32)
+        ww = np.concatenate([w, w]).astype(np.int32)
+        return EdgeList(n_nodes, src, dst, ww)
+
+    def sorted_by_dst(self) -> "EdgeList":
+        order = np.lexsort((self.src, self.dst))
+        return EdgeList(self.n_nodes, self.src[order], self.dst[order], self.weight[order])
+
+    def degrees(self) -> Tuple[np.ndarray, np.ndarray]:
+        out = np.bincount(self.src, minlength=self.n_nodes)
+        inn = np.bincount(self.dst, minlength=self.n_nodes)
+        return out.astype(np.int64), inn.astype(np.int64)
+
+    def remove_self_loops(self) -> "EdgeList":
+        keep = self.src != self.dst
+        return EdgeList(self.n_nodes, self.src[keep], self.dst[keep], self.weight[keep])
+
+    def coalesce(self) -> "EdgeList":
+        """Keep minimum weight among parallel edges."""
+        key = self.dst.astype(np.int64) * self.n_nodes + self.src.astype(np.int64)
+        order = np.lexsort((self.weight, key))
+        key_s = key[order]
+        first = np.ones(len(key_s), dtype=bool)
+        first[1:] = key_s[1:] != key_s[:-1]
+        idx = order[first]
+        return EdgeList(self.n_nodes, self.src[idx], self.dst[idx], self.weight[idx])
+
+
+@dataclass
+class DeviceGraph:
+    """Device-ready destination-sorted, padded edge arrays.
+
+    Padding edges point from the sentinel source ``n_nodes`` (a phantom node
+    whose state is pinned at INF) to destination ``n_nodes`` as well; node
+    arrays carry one extra trailing slot for the phantom so no masking is
+    needed in the inner relaxation loop.
+
+    ``tile_ptr`` maps node tiles to edge-block ranges for the Pallas kernel:
+    tile t owns nodes [t*node_tile, (t+1)*node_tile) and its candidate edges
+    live in edge blocks [tile_ptr[t], tile_ptr[t+1]).
+    """
+
+    n_nodes: int
+    n_edges: int  # real (unpadded) edge count
+    src: jnp.ndarray  # int32 [Ep]
+    dst: jnp.ndarray  # int32 [Ep]
+    weight: jnp.ndarray  # int32 [Ep]
+    node_tile: int
+    edge_block: int
+    tile_ptr: jnp.ndarray  # int32 [n_tiles+1]
+
+    @property
+    def n_padded_nodes(self) -> int:
+        # +1 phantom slot, rounded up to node_tile
+        return next_multiple(self.n_nodes + 1, self.node_tile)
+
+    @property
+    def n_tiles(self) -> int:
+        return self.n_padded_nodes // self.node_tile
+
+    @staticmethod
+    def build(
+        edges: EdgeList,
+        node_tile: int = 256,
+        edge_block: int = 512,
+    ) -> "DeviceGraph":
+        e = edges.sorted_by_dst()
+        n = e.n_nodes
+        n_pad_nodes = next_multiple(n + 1, node_tile)
+        n_tiles = n_pad_nodes // node_tile
+
+        # Split destination-sorted edges so no edge block straddles a node-tile
+        # boundary: pad each tile's edge segment to a multiple of edge_block.
+        dst = e.dst
+        tile_of_edge = dst // node_tile
+        counts = np.bincount(tile_of_edge, minlength=n_tiles).astype(np.int64)
+        padded_counts = np.where(counts > 0, ((counts + edge_block - 1) // edge_block) * edge_block, 0)
+        total = int(padded_counts.sum())
+        total = max(total, edge_block)
+
+        src_p = np.full(total, n, dtype=np.int32)  # phantom source
+        dst_p = np.full(total, n, dtype=np.int32)  # phantom destination
+        w_p = np.ones(total, dtype=np.int32)
+
+        starts_in = np.concatenate([[0], np.cumsum(counts)])[:-1]
+        starts_out = np.concatenate([[0], np.cumsum(padded_counts)])[:-1]
+        for t in range(n_tiles):
+            c = int(counts[t])
+            if c == 0:
+                continue
+            si, so = int(starts_in[t]), int(starts_out[t])
+            src_p[so : so + c] = e.src[si : si + c]
+            dst_p[so : so + c] = e.dst[si : si + c]
+            w_p[so : so + c] = e.weight[si : si + c]
+
+        tile_ptr = np.zeros(n_tiles + 1, dtype=np.int32)
+        tile_ptr[1:] = np.cumsum(padded_counts // edge_block)
+
+        return DeviceGraph(
+            n_nodes=n,
+            n_edges=e.n_edges,
+            src=jnp.asarray(src_p),
+            dst=jnp.asarray(dst_p),
+            weight=jnp.asarray(w_p),
+            node_tile=node_tile,
+            edge_block=edge_block,
+            tile_ptr=jnp.asarray(tile_ptr),
+        )
+
+
+def to_scipy_csr(edges: EdgeList):
+    """Build a scipy CSR matrix (for oracle shortest paths in tests/quotient)."""
+    import scipy.sparse as sp
+
+    return sp.csr_matrix(
+        (edges.weight.astype(np.float64), (edges.src, edges.dst)),
+        shape=(edges.n_nodes, edges.n_nodes),
+    )

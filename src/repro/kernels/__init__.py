@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel subpackage has: kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd dispatching wrapper), ref.py (pure-jnp oracle). All validated
+in interpret mode on CPU; `impl="pallas"` targets real TPUs.
+
+  edge_relax      the paper's hot spot: fused Delta-growing relax + lexicographic
+                  (d, c, pathw) tuple-min in one HBM pass
+  flash_attention online-softmax attention w/ GQA + sliding-window + softcap
+  segment_mm      GNN message passing: scatter-sum as one-hot MXU matmul
+  cin             xDeepFM compressed interaction without materializing Z
+"""
+from repro.kernels.edge_relax.ops import edge_relax, block_edges_host
+from repro.kernels.flash_attention.ops import attention, attention_blocked
+from repro.kernels.segment_mm.ops import segment_mm
+from repro.kernels.cin.ops import cin, cin_layer
+
+__all__ = [
+    "edge_relax",
+    "block_edges_host",
+    "attention",
+    "attention_blocked",
+    "segment_mm",
+    "cin",
+    "cin_layer",
+]

@@ -1,0 +1,25 @@
+"""Public CIN entry point (jit'd dispatch + full-stack helper)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.cin.kernel import cin_layer_pallas
+from repro.kernels.cin.ref import cin_layer_ref
+
+
+def cin_layer(x0: jnp.ndarray, xk: jnp.ndarray, w: jnp.ndarray,
+              impl: str = "ref", d_tile: int = 0) -> jnp.ndarray:
+    if impl == "ref":
+        return cin_layer_ref(x0, xk, w)
+    return cin_layer_pallas(x0, xk, w, d_tile=d_tile,
+                            interpret=(impl == "interpret"))
+
+
+def cin(x0: jnp.ndarray, weights, impl: str = "ref") -> jnp.ndarray:
+    """Full CIN stack with per-layer sum pooling -> [B, sum(H_k)]."""
+    xk = x0
+    pooled = []
+    for w in weights:
+        xk = cin_layer(x0, xk, w, impl=impl)
+        pooled.append(xk.sum(axis=-1))
+    return jnp.concatenate(pooled, axis=-1)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the xDeepFM Compressed Interaction Network layer.
+
+One CIN layer (arXiv:1803.05170, Eq. 6):
+
+  X^{k+1}[b, n, d] = sum_{h, m} W[n, h, m] * X^k[b, h, d] * X^0[b, m, d]
+
+i.e. the field-wise outer product of the current hidden map with the base
+embeddings, compressed along (h, m) by learned filters — a feature-map-sized
+"convolution" along the embedding dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def cin_layer_ref(x0: jnp.ndarray, xk: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x0 [B, m, D], xk [B, H, D], w [H2, H, m] -> [B, H2, D]."""
+    z = jnp.einsum("bhd,bmd->bhmd", xk, x0)
+    return jnp.einsum("bhmd,nhm->bnd", z, w)
+
+
+def cin_ref(x0: jnp.ndarray, weights) -> jnp.ndarray:
+    """Full CIN stack; returns the concatenated per-layer sum-pooling
+    [B, sum(H_k)] used as the CIN logit features."""
+    xk = x0
+    pooled = []
+    for w in weights:
+        xk = cin_layer_ref(x0, xk, w)
+        pooled.append(xk.sum(axis=-1))
+    return jnp.concatenate(pooled, axis=-1)

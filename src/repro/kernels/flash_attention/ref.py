@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for attention with the assigned archs' variants.
+
+Supports: causal masking, GQA (n_q_heads a multiple of n_kv_heads), sliding
+window (mistral/gemma2 local layers), attention logit soft-capping (gemma2),
+explicit kv-length masking (decode against a partially-filled cache).
+
+Naive O(S^2) materialization — the correctness oracle for the Pallas kernel
+and the blocked-jnp implementation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,            # [B, Hq, Sq, D]
+    k: jnp.ndarray,            # [B, Hkv, Skv, D]
+    v: jnp.ndarray,            # [B, Hkv, Skv, D]
+    causal: bool = True,
+    window: int = 0,           # 0 = full; else keys within (qpos - w, qpos]
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    kv_len: Optional[jnp.ndarray] = None,   # int32 [] or [B]: valid kv prefix
+    q_offset: Optional[jnp.ndarray] = None, # int32 []: global pos of q[0]
+) -> jnp.ndarray:
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    kk = jnp.repeat(k, group, axis=1)  # [B, Hq, Skv, D]
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    if q_offset is not None:
+        q_pos = q_pos + q_offset
+    k_pos = jnp.arange(Skv, dtype=jnp.int32)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    mask = jnp.broadcast_to(mask[None, None], (B, 1, Sq, Skv))
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len, jnp.int32).reshape(-1)  # [] or [B] -> [B']
+        klm = k_pos[None, :] < kv_len[:, None]               # [B', Skv]
+        mask = mask & klm[:, None, None, :]
+
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (fully masked) produce zeros, not NaNs
+    any_valid = mask.any(axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,64 @@
+"""Public wrapper for segment_mm: message passing over blocked edges.
+
+``segment_mm(x, src, dst, coeff, n_nodes, impl=...)`` accepts flat edge
+arrays (any order). "pallas"/"interpret" re-block destination-sorted on the
+host at trace time if given numpy inputs, otherwise callers pre-block with
+``block_edges_for_mm`` and call ``segment_mm_blocked``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.edge_relax.ops import block_edges_host
+from repro.kernels.segment_mm.kernel import (
+    EDGE_BLOCK,
+    NODE_TILE,
+    segment_mm_pallas,
+)
+from repro.kernels.segment_mm.ref import segment_mm_ref
+
+
+def block_edges_for_mm(src, dst, n_nodes, node_tile=NODE_TILE, edge_block=EDGE_BLOCK):
+    """Host-side blocking (reuses edge_relax layout; returns permutation so
+    callers can reorder per-edge coefficients to match)."""
+    order = np.lexsort((src, dst))
+    blk = block_edges_host(
+        np.asarray(src)[order], np.asarray(dst)[order], np.ones(len(src), np.int32),
+        n_nodes, node_tile, edge_block,
+    )
+    blk["perm"] = order
+    return blk
+
+
+@partial(jax.jit, static_argnames=("n_tiles", "node_tile", "edge_block", "interpret"))
+def segment_mm_blocked(
+    x, blocked_src, blocked_dst, blocked_coeff, block_tile,
+    n_tiles, node_tile=NODE_TILE, edge_block=EDGE_BLOCK, interpret=False,
+):
+    x_src = x[blocked_src.reshape(-1)]
+    return segment_mm_pallas(
+        x_src, blocked_coeff, blocked_dst, block_tile,
+        n_tiles=n_tiles, node_tile=node_tile, edge_block=edge_block,
+        interpret=interpret,
+    )
+
+
+def segment_mm(x, src, dst, coeff, n_nodes, impl: str = "ref",
+               node_tile=NODE_TILE, edge_block=EDGE_BLOCK):
+    if impl == "ref":
+        return segment_mm_ref(x, src, dst, coeff, n_nodes)
+    blk = block_edges_for_mm(np.asarray(src), np.asarray(dst), n_nodes,
+                             node_tile, edge_block)
+    coeff_np = np.asarray(coeff)[blk["perm"]]
+    cb = np.zeros(blk["src"].shape, np.float32)
+    cb[blk["mask"] == 1] = coeff_np
+    y = segment_mm_blocked(
+        jnp.asarray(x), jnp.asarray(blk["src"]), jnp.asarray(blk["dst"]),
+        jnp.asarray(cb), jnp.asarray(blk["block_tile"]), blk["n_tiles"],
+        node_tile, edge_block, interpret=(impl == "interpret"),
+    )
+    return y[:n_nodes]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the GNN gather-scale-scatter primitive.
+
+  Y[n, :] = sum over edges e with dst[e] == n of coeff[e] * X[src[e], :]
+
+This is message passing (SpMM with per-edge scalar coefficients: GCN's
+normalized adjacency, GatedGCN's gates reduce to it per channel-group,
+MeshGraphNet's sum-aggregation has coeff = 1).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("n_nodes",))
+def segment_mm_ref(
+    x: jnp.ndarray,       # [N, D] node features
+    src: jnp.ndarray,     # int32 [E]
+    dst: jnp.ndarray,     # int32 [E]
+    coeff: jnp.ndarray,   # float [E]
+    n_nodes: int,
+) -> jnp.ndarray:
+    msgs = x[src] * coeff[:, None]
+    return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--smoke-scale]
+  PYTHONPATH=src python -m repro.launch.dryrun --engine          # paper engine row
+
+Each cell: jit(step, in_shardings=..., out_shardings=...).lower(*specs)
+.compile(); prints memory_analysis() (fits-per-device proof) and
+cost_analysis() (FLOPs/bytes for §Roofline); appends a JSON row to
+--out (default /root/repo/results/dryrun.jsonl).
+
+(No `from __future__ import annotations` here: the XLA_FLAGS lines must be
+the first statements in the file, which PEP 236 forbids to combine.)
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.config.registry import get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import all_cells, build_cell
+from repro.runtime.roofline import analyze
+
+RESULTS = "/root/repo/results/dryrun.jsonl"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_path: str,
+             smoke: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, smoke=smoke)
+    with mesh:
+        jitted = jax.jit(
+            cell.step_fn,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate,
+        )
+        lowered = jitted.lower(*cell.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    rep = analyze(f"{arch}/{shape}", lowered, compiled, n_chips,
+                  model_flops=cell.model_flops)
+    row = rep.row()
+    row.update({
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "multi_pod": multi_pod,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "note": cell.note,
+        "ok": True,
+    })
+    try:
+        row["arg_bytes_per_dev"] = int(mem.argument_size_in_bytes)
+        row["temp_bytes_per_dev"] = int(mem.temp_size_in_bytes)
+        row["output_bytes_per_dev"] = int(mem.output_size_in_bytes)
+    except Exception:
+        pass
+    print("memory_analysis:", mem)
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    print("cost_analysis: flops=%.3e bytes=%.3e" % (
+        float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0))))
+    print(json.dumps(row))
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "a") as f:
+            f.write(json.dumps(row) + "\n")
+    return row
+
+
+def run_engine(multi_pod: bool, out_path: str) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    cell = build_cell("paper-graph", "", mesh)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(cell.step_fn).lower(*cell.arg_specs)
+        compiled = lowered.compile()
+    rep = analyze(f"paper-graph/{cell.shape}", lowered, compiled, n_chips)
+    row = rep.row()
+    row.update({
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "multi_pod": multi_pod, "compile_s": round(time.time() - t0, 1),
+        "note": cell.note, "ok": True,
+    })
+    print("memory_analysis:", compiled.memory_analysis())
+    print(json.dumps(row))
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "a") as f:
+            f.write(json.dumps(row) + "\n")
+    return row
+
+
+def main() -> int:  # noqa: C901
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--engine", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke-scale", action="store_true",
+                    help="reduced configs (CI sanity of the dry-run path)")
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args()
+
+    if args.engine:
+        run_engine(args.multi_pod, args.out)
+        return 0
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch, shape in cells:
+        print(f"=== {arch} / {shape} (multi_pod={args.multi_pod}) ===",
+              flush=True)
+        try:
+            run_cell(arch, shape, args.multi_pod, args.out,
+                     smoke=args.smoke_scale)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+            if args.out:
+                os.makedirs(os.path.dirname(args.out), exist_ok=True)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({
+                        "name": f"{arch}/{shape}", "ok": False,
+                        "multi_pod": args.multi_pod, "error": repr(e)[:500],
+                    }) + "\n")
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print("dry-run complete: all cells compiled")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — launch/dryrun.py must set XLA_FLAGS before any
+jax initialization.
+
+  single pod : (16, 16)    axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests use small CPU meshes like (2, 2))."""
+    return jax.make_mesh(shape, axes)
+
+
+def host_device_mesh(n: Optional[int] = None, axes=("data", "model")):
+    """Best-effort mesh over whatever devices exist (CPU tests)."""
+    n = n or len(jax.devices())
+    a = 1
+    while (a * 2) * (a * 2) <= n * 4 and a * a < n:
+        a *= 2
+    a = min(a, n)
+    return jax.make_mesh((a, n // a), axes)

@@ -1,0 +1,111 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from results/*.jsonl.
+
+  PYTHONPATH=src python -m repro.launch.report > /root/repo/results/tables.md
+
+The §Repro / §Perf prose sections live in EXPERIMENTS.md itself; this tool
+regenerates the mechanical tables after a new dry-run / fit sweep.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from collections import OrderedDict
+
+RESULTS = "/root/repo/results"
+
+
+def _load_latest(path, key=lambda r: (r["name"], r.get("multi_pod", False))):
+    rows = OrderedDict()
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            rows[key(r)] = r
+    return rows
+
+
+def dryrun_table() -> str:
+    rows = _load_latest(os.path.join(RESULTS, "dryrun.jsonl"))
+    out = ["| cell | mesh | compile_s | args MB/dev | temp MB/dev | "
+           "collectives (count) | fits 16G? |",
+           "|---|---|---|---|---|---|---|"]
+    for (name, mp), r in sorted(rows.items()):
+        if not r.get("ok"):
+            out.append(f"| {name} | {'2x16x16' if mp else '16x16'} | FAILED | | | | |")
+            continue
+        args_mb = r.get("arg_bytes_per_dev", 0) / 1e6
+        temp_mb = r.get("temp_bytes_per_dev", 0) / 1e6
+        tot = (r.get("arg_bytes_per_dev", 0) + r.get("temp_bytes_per_dev", 0)
+               + r.get("output_bytes_per_dev", 0)) / 1e9
+        colls = " ".join(f"{k}:{v}" for k, v in r.get("collectives", {}).items())
+        out.append(
+            f"| {name} | {r['mesh']} | {r.get('compile_s', '?')} | "
+            f"{args_mb:.0f} | {temp_mb:.0f} | {colls} | "
+            f"{'yes' if tot < 16 else f'NO ({tot:.0f}G)'} |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    fitted = _load_latest(os.path.join(RESULTS, "roofline.jsonl"))
+    raw = _load_latest(os.path.join(RESULTS, "dryrun.jsonl"))
+    out = ["| cell | mesh | t_compute | t_memory | t_collective | bottleneck | "
+           "useful | roofline_frac |",
+           "|---|---|---|---|---|---|---|---|"]
+
+    def fmt_ms(v):
+        return f"{v:.2f}ms" if v >= 0.01 else f"{v*1000:.1f}us"
+
+    seen = set()
+    for (name, mp), r in sorted(fitted.items()):
+        out.append(
+            f"| {name} | {r['mesh']} | {fmt_ms(r['t_compute_ms'])} | "
+            f"{fmt_ms(r['t_memory_ms'])} | {fmt_ms(r['t_collective_ms'])} | "
+            f"{r['bottleneck']} | {r['useful_ratio']} | {r['roofline_frac']} |")
+        seen.add((name, mp))
+    for (name, mp), r in sorted(raw.items()):
+        if (name, mp) in seen or not r.get("ok") or mp:
+            continue
+        arch = name.split("/")[0]
+        if arch in ("gemma2-9b", "qwen1.5-32b", "mistral-nemo-12b",
+                    "moonshot-v1-16b-a3b", "mixtral-8x7b"):
+            continue  # LM rows come from the fit
+        out.append(
+            f"| {name} | {r['mesh']} | {fmt_ms(r['t_compute_ms'])} | "
+            f"{fmt_ms(r['t_memory_ms'])} | {fmt_ms(r['t_collective_ms'])} | "
+            f"{r['bottleneck']} | n/a | {r.get('roofline_frac', 0)} |")
+    return "\n".join(out)
+
+
+def bench_tables() -> str:
+    out = []
+    for name in ("table1_graphs", "table2_stop_variant", "table3_vs_sssp",
+                 "table4_sigma", "delta_init"):
+        path = os.path.join(RESULTS, f"{name}.json")
+        if not os.path.exists(path):
+            continue
+        rows = json.load(open(path))
+        if not rows:
+            continue
+        cols = list(rows[0].keys())
+        out.append(f"\n#### {name}\n")
+        out.append("| " + " | ".join(cols) + " |")
+        out.append("|" + "---|" * len(cols))
+        for r in rows:
+            out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def main() -> int:
+    print("## §Dry-run (generated)\n")
+    print(dryrun_table())
+    print("\n## §Roofline (generated)\n")
+    print(roofline_table())
+    print("\n## §Repro benchmark tables (generated)\n")
+    print(bench_tables())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill + steady-state decode with a KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import get_logger
+from repro.config.registry import get_arch
+from repro.models import transformer as tf_mod
+
+log = get_logger("repro.serve")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(0)
+    params = tf_mod.init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    cache = tf_mod.init_cache(cfg, args.batch, max_len)
+
+    decode = jax.jit(lambda p, c, t: tf_mod.decode_step(p, c, t, cfg))
+
+    # prefill by streaming the prompt through decode (keeps ONE compiled
+    # step; a production server would batch-prefill via forward())
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = decode(params, cache, prompts[:, i:i+1])
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    toks = []
+    t0 = time.time()
+    cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for i in range(args.gen):
+        toks.append(cur)
+        logits, cache = decode(params, cache, cur)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(
+                sub, logits / args.temperature)[:, None].astype(jnp.int32)
+        else:
+            cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+
+    out = np.asarray(jnp.concatenate(toks, axis=1))
+    log.info("prefill %.2fs (%.1f tok/s)  decode %.2fs (%.1f tok/s/seq)",
+             t_prefill, args.batch * args.prompt_len / t_prefill,
+             t_decode, args.gen / t_decode)
+    log.info("generated ids[0,:8] = %s", out[0, :8].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

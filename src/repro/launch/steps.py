@@ -1,0 +1,503 @@
+"""Step builders + input_specs for every (arch x shape) cell.
+
+`build_cell(arch_name, shape_name, mesh, smoke=False)` returns a `Cell`:
+  step_fn        the function to lower (train_step / serve_step)
+  arg_specs      ShapeDtypeStructs WITH NamedShardings (no allocation)
+  out_shardings  sharding tree for outputs (or None)
+  model_flops    analytic useful FLOPs (6ND for LM; 0 where n/a)
+  donate         argnums to donate
+
+This module is the single source of truth for what the dry-run lowers and
+for what train.py/serve.py execute — the smoke tests run the same step_fn
+with real (tiny) arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import (
+    GNNConfig,
+    GraphEngineConfig,
+    MoEConfig,
+    RecsysConfig,
+    ShapeSpec,
+    TrainConfig,
+    TransformerConfig,
+    shapes_for_family,
+)
+from repro.config.registry import get_arch
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tf_mod
+from repro.optim import adamw
+from repro.runtime import sharding as shrules
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_fn: Callable
+    arg_specs: Tuple[Any, ...]
+    out_shardings: Any
+    model_flops: float
+    donate: Tuple[int, ...] = ()
+    note: str = ""
+
+
+def _sds(tree_shapes, shard_tree, mesh):
+    """ShapeDtypeStruct tree with NamedShardings attached."""
+    named = shrules.named(mesh, shard_tree)
+
+    def mk(sh, sd):
+        return SDS(sh.shape, sh.dtype, sharding=sd)
+
+    return jax.tree.map(mk, tree_shapes, named)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_model_flops(cfg, shape: ShapeSpec, kind: str) -> float:
+    n = cfg.active_param_count() if isinstance(cfg, MoEConfig) else cfg.param_count()
+    if kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def _lm_cell(cfg: TransformerConfig, shape: ShapeSpec, mesh: Mesh,
+             train_cfg: TrainConfig) -> Cell:
+    tf_mod.MOE_A2A = None
+    if isinstance(cfg, MoEConfig):
+        # explicit-a2a EP for train/prefill (decode token counts are below
+        # the chip count; those cells keep the GSPMD dispatch)
+        n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        M = mesh.shape["model"]
+        T = shape.seq_len * shape.global_batch
+        if (shape.kind in ("train", "prefill") and T % n_chips == 0
+                and (cfg.n_experts % M == 0 or M % cfg.n_experts == 0)):
+            tf_mod.MOE_A2A = (mesh, cfg.capacity_factor)
+    if isinstance(cfg, MoEConfig):
+        # group-local MoE dispatch: one group per DP shard; pin the dispatch
+        # buffers G->data, E->model (EP) or unsharded E for the f-TP fallback
+        n_dp = int(np.prod([mesh.shape[a] for a in shrules.data_axes(mesh)]))
+        cfg = dataclasses.replace(cfg, moe_groups=n_dp)
+        d_ax = shrules.data_axes(mesh)
+        e_ax = "model" if cfg.n_experts % mesh.shape["model"] == 0 else None
+        if tf_mod.MOE_A2A is not None:
+            # a2a path: tokens stay sequence-sharded over 'model' so the
+            # shard_map boundary is a zero-copy split on both sides. On the
+            # 3-axis pod mesh the exit must ALSO be pinned or GSPMD
+            # back-propagates a 256-way-B x 2-way-S layout into attention
+            # (involuntary remat); on the 2-axis mesh that pin costs an
+            # extra reshard, so it is pod-only.
+            tf_mod.MOE_CONSTRAINTS = {"h": P(d_ax, "model", None)}
+            if "pod" in mesh.axis_names:
+                tf_mod.MOE_CONSTRAINTS["moe_out"] = P(d_ax, "model", None)
+        else:
+            tf_mod.MOE_CONSTRAINTS = {
+                "h": P(d_ax, None, None),
+                "h_tok": P(d_ax, None, None),
+                "x_disp": P(d_ax, e_ax, None, None),
+                "y": P(d_ax, e_ax, None, None),
+            }
+    else:
+        tf_mod.MOE_CONSTRAINTS = {}
+    pspecs = shrules.lm_param_specs(cfg, mesh)
+    pshapes = jax.eval_shape(partial(tf_mod.init_params, cfg),
+                             jax.random.PRNGKey(0))
+    params_sds = _sds(pshapes, pspecs, mesh)
+
+    if shape.kind == "train":
+        oshapes = jax.eval_shape(adamw.init_state, pshapes)
+        ospecs = (
+            adamw.zero1_state_specs(pspecs, pshapes,
+                                    axis_size=mesh.shape["data"])
+            if train_cfg.zero1 else pspecs
+        )
+        opt_sds = adamw.AdamWState(
+            m=_sds(oshapes.m, ospecs, mesh),
+            v=_sds(oshapes.v, ospecs, mesh),
+            step=SDS((), jnp.int32, sharding=shrules.replicated(mesh)),
+        )
+        bspecs = shrules.lm_batch_specs(mesh)
+        B, S = shape.global_batch, shape.seq_len
+        batch_sds = _sds(
+            {"tokens": SDS((B, S), jnp.int32), "labels": SDS((B, S), jnp.int32)},
+            bspecs, mesh,
+        )
+
+        act_spec = P(shrules.data_axes(mesh), "model", None)
+
+        def train_step(params, opt, batch):
+            loss, grads = jax.value_and_grad(tf_mod.lm_loss)(
+                params, batch, cfg, act_spec=act_spec)
+            params, opt, stats = adamw.apply_updates(params, opt, grads, train_cfg)
+            return params, opt, loss, stats
+
+        out_sh = (
+            shrules.named(mesh, pspecs),
+            adamw.AdamWState(
+                m=shrules.named(mesh, ospecs), v=shrules.named(mesh, ospecs),
+                step=shrules.replicated(mesh),
+            ),
+            shrules.replicated(mesh),
+            {"grad_norm": shrules.replicated(mesh), "lr": shrules.replicated(mesh)},
+        )
+        return Cell(cfg.name, shape.name, train_step,
+                    (params_sds, opt_sds, batch_sds), out_sh,
+                    _lm_model_flops(cfg, shape, "train"), donate=(0, 1))
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        batch_sds = _sds({"tokens": SDS((B, S), jnp.int32)},
+                         {"tokens": P(shrules.data_axes(mesh), None)}, mesh)
+
+        act_spec = P(shrules.data_axes(mesh), "model", None)
+
+        def serve_prefill(params, batch):
+            return tf_mod.prefill_step(params, batch["tokens"], cfg,
+                                       act_spec=act_spec)
+
+        return Cell(cfg.name, shape.name, serve_prefill,
+                    (params_sds, batch_sds), None,
+                    _lm_model_flops(cfg, shape, "prefill"))
+
+    # decode: one new token against a kv cache of shape.seq_len
+    B, S = shape.global_batch, shape.seq_len
+    cshapes = jax.eval_shape(partial(tf_mod.init_cache, cfg, B, S))
+    cspecs = shrules.lm_cache_specs(cfg, mesh, B)
+    cache_sds = _sds(cshapes, cspecs, mesh)
+    tok_sds = _sds({"t": SDS((B, 1), jnp.int32)},
+                   {"t": P(shrules.data_axes(mesh) if B > 1 else None, None)},
+                   mesh)["t"]
+
+    def serve_decode(params, cache, tok):
+        # steady-state decode: cache already holds seq_len-1 tokens
+        cache = dict(cache, len=jnp.int32(S - 1))
+        logits, new_cache = tf_mod.decode_step(params, cache, tok, cfg)
+        return logits, new_cache
+
+    out_sh = (shrules.replicated(mesh), shrules.named(mesh, cspecs))
+    return Cell(cfg.name, shape.name, serve_decode,
+                (params_sds, cache_sds, tok_sds), out_sh,
+                _lm_model_flops(cfg, shape, "decode"), donate=(1,),
+                note="decode against %d-token cache" % S)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+_GNN_EDGE_DIM = {"gatedgcn": 1, "meshgraphnet": 4}
+
+
+def _gnn_graph_sds(cfg: GNNConfig, shape: ShapeSpec, mesh: Mesh,
+                   pad_nodes: int, pad_edges: int):
+    flat = shrules.flat_axes(mesh)
+    d_feat = shape.d_feat or 32
+    tree = {
+        "x": SDS((pad_nodes, d_feat), jnp.float32),
+        "src": SDS((pad_edges,), jnp.int32),
+        "dst": SDS((pad_edges,), jnp.int32),
+        "labels": SDS((pad_nodes,), jnp.int32),
+    }
+    spec = {
+        "x": P(flat, None), "src": P(flat), "dst": P(flat), "labels": P(flat),
+    }
+    if cfg.kind == "equiformer_v2":
+        tree["pos"] = SDS((pad_nodes, 3), jnp.float32)
+        spec["pos"] = P(flat, None)
+    if cfg.kind in _GNN_EDGE_DIM:
+        tree["e"] = SDS((pad_edges, _GNN_EDGE_DIM[cfg.kind]), jnp.float32)
+        spec["e"] = P(flat, None)
+    return tree, spec
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _gnn_cell(cfg: GNNConfig, shape: ShapeSpec, mesh: Mesh,
+              train_cfg: TrainConfig) -> Cell:
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    d_feat = shape.d_feat or 32
+
+    pshapes = jax.eval_shape(
+        partial(gnn_mod.init_gnn, cfg, d_feat,
+                d_edge_in=_GNN_EDGE_DIM.get(cfg.kind, 1)),
+        jax.random.PRNGKey(0),
+    )
+    pspecs = shrules.gnn_param_specs(pshapes, mesh)
+    params_sds = _sds(pshapes, pspecs, mesh)
+
+    opt_shapes = jax.eval_shape(adamw.init_state, pshapes)
+    opt_sds = adamw.AdamWState(
+        m=_sds(opt_shapes.m, pspecs, mesh),
+        v=_sds(opt_shapes.v, pspecs, mesh),
+        step=SDS((), jnp.int32, sharding=shrules.replicated(mesh)),
+    )
+
+    if shape.kind == "batched_graphs":
+        N = shape.n_graphs * shape.n_nodes
+        E = shape.n_graphs * shape.n_edges
+        pad_n, pad_e = _round_up(N, n_dev), _round_up(E, n_dev)
+        tree, spec = _gnn_graph_sds(cfg, shape, mesh, pad_n, pad_e)
+        flat = shrules.flat_axes(mesh)
+        tree["graph_id"] = SDS((pad_n,), jnp.int32)
+        tree["targets"] = SDS((shape.n_graphs, cfg.d_out), jnp.float32)
+        spec["graph_id"] = P(flat)
+        spec["targets"] = P(None, None)
+        loss_fn = gnn_mod.graph_regression_loss
+    elif shape.kind == "minibatch":
+        # padded sampled-block sizes from (batch_nodes, fanout)
+        b = shape.batch_nodes
+        f1, f0 = shape.fanout
+        n1 = b * (f1 + 1)
+        n0 = n1 * (f0 + 1)
+        pad_n = _round_up(n0, n_dev)
+        pad_e = _round_up(n1 * f0 + b * f1, n_dev)
+        tree, spec = _gnn_graph_sds(cfg, shape, mesh, pad_n, pad_e)
+        flat = shrules.flat_axes(mesh)
+        tree["seed_slots"] = SDS((b,), jnp.int32)
+        spec["seed_slots"] = P(flat)
+        loss_fn = gnn_mod.node_classification_loss
+    else:  # full_graph
+        pad_n = _round_up(shape.n_nodes, n_dev)
+        pad_e = _round_up(shape.n_edges, n_dev)
+        tree, spec = _gnn_graph_sds(cfg, shape, mesh, pad_n, pad_e)
+        loss_fn = gnn_mod.node_classification_loss
+
+    graph_sds = _sds(tree, spec, mesh)
+
+    def train_step(params, opt, graph):
+        loss, grads = jax.value_and_grad(loss_fn)(params, graph, cfg)
+        params, opt, stats = adamw.apply_updates(params, opt, grads, train_cfg)
+        return params, opt, loss, stats
+
+    out_sh = (
+        shrules.named(mesh, pspecs),
+        adamw.AdamWState(m=shrules.named(mesh, pspecs),
+                         v=shrules.named(mesh, pspecs),
+                         step=shrules.replicated(mesh)),
+        shrules.replicated(mesh),
+        {"grad_norm": shrules.replicated(mesh), "lr": shrules.replicated(mesh)},
+    )
+    return Cell(cfg.name, shape.name, train_step,
+                (params_sds, opt_sds, graph_sds), out_sh, 0.0, donate=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_cell(cfg: RecsysConfig, shape: ShapeSpec, mesh: Mesh,
+                 train_cfg: TrainConfig) -> Cell:
+    pshapes = jax.eval_shape(partial(recsys_mod.init_params, cfg),
+                             jax.random.PRNGKey(0))
+    pspecs = shrules.recsys_param_specs(cfg, mesh)
+    params_sds = _sds(pshapes, pspecs, mesh)
+    d = shrules.data_axes(mesh)
+    bag = max(cfg.multi_hot, 1)
+
+    if shape.kind == "recsys_train":
+        B = shape.batch
+        bspec = shrules.recsys_batch_specs(mesh)
+        batch_sds = _sds(
+            {
+                "ids": SDS((B, cfg.n_sparse, bag), jnp.int32),
+                "id_mask": SDS((B, cfg.n_sparse, bag), jnp.float32),
+                "dense": SDS((B, cfg.n_dense), jnp.float32),
+                "labels": SDS((B,), jnp.int32),
+            },
+            bspec, mesh,
+        )
+        oshapes = jax.eval_shape(adamw.init_state, pshapes)
+        ospecs = (
+            adamw.zero1_state_specs(pspecs, pshapes,
+                                    axis_size=mesh.shape["data"])
+            if train_cfg.zero1 else pspecs
+        )
+        opt_sds = adamw.AdamWState(
+            m=_sds(oshapes.m, ospecs, mesh),
+            v=_sds(oshapes.v, ospecs, mesh),
+            step=SDS((), jnp.int32, sharding=shrules.replicated(mesh)),
+        )
+
+        def train_step(params, opt, batch):
+            loss, grads = jax.value_and_grad(recsys_mod.bce_loss)(params, batch, cfg)
+            params, opt, stats = adamw.apply_updates(params, opt, grads, train_cfg)
+            return params, opt, loss, stats
+
+        out_sh = (
+            shrules.named(mesh, pspecs),
+            adamw.AdamWState(m=shrules.named(mesh, ospecs),
+                             v=shrules.named(mesh, ospecs),
+                             step=shrules.replicated(mesh)),
+            shrules.replicated(mesh),
+            {"grad_norm": shrules.replicated(mesh), "lr": shrules.replicated(mesh)},
+        )
+        return Cell(cfg.name, shape.name, train_step,
+                    (params_sds, opt_sds, batch_sds), out_sh, 0.0, donate=(0, 1))
+
+    if shape.kind == "recsys_serve":
+        B = shape.batch
+        batch_sds = _sds(
+            {
+                "ids": SDS((B, cfg.n_sparse, bag), jnp.int32),
+                "id_mask": SDS((B, cfg.n_sparse, bag), jnp.float32),
+                "dense": SDS((B, cfg.n_dense), jnp.float32),
+            },
+            {"ids": P(d, None, None), "id_mask": P(d, None, None),
+             "dense": P(d, None)},
+            mesh,
+        )
+
+        def serve(params, batch):
+            return recsys_mod.forward(params, batch, cfg)
+
+        return Cell(cfg.name, shape.name, serve,
+                    (params_sds, batch_sds), None, 0.0)
+
+    # retrieval: 1 query x n_candidates. Candidates shard over the data
+    # axes only (1e6 divides 16/32 but not 256); the model axis is busy
+    # row-sharding the embedding tables the candidate gather hits.
+    C = shape.n_candidates
+    fu = cfg.n_sparse // 3              # user fields
+    fi = cfg.n_sparse - fu              # item fields per candidate
+    flat = shrules.data_axes(mesh)
+    q_sds = _sds(
+        {
+            "user_ids": SDS((1, fu, bag), jnp.int32),
+            "user_mask": SDS((1, fu, bag), jnp.float32),
+            "user_dense": SDS((1, cfg.n_dense), jnp.float32),
+            "cand_ids": SDS((C, fi, bag), jnp.int32),
+            "cand_mask": SDS((C, fi, bag), jnp.float32),
+        },
+        {
+            "user_ids": P(None, None, None), "user_mask": P(None, None, None),
+            "user_dense": P(None, None),
+            "cand_ids": P(flat, None, None), "cand_mask": P(flat, None, None),
+        },
+        mesh,
+    )
+
+    # retrieval reuses a reduced-field forward: user fields + item fields
+    rcfg = dataclasses.replace(cfg, n_sparse=fu + fi)
+
+    def retrieval(params, q):
+        return recsys_mod.retrieval_scores(
+            params, q["user_ids"], q["user_mask"], q["user_dense"],
+            q["cand_ids"], q["cand_mask"], rcfg,
+        )
+
+    return Cell(cfg.name, shape.name, retrieval, (params_sds, q_sds),
+                None, 0.0, note=f"1 query x {C} candidates")
+
+
+# ---------------------------------------------------------------------------
+# paper engine cell (extra row beyond the 40)
+# ---------------------------------------------------------------------------
+
+def _engine_cell(cfg: GraphEngineConfig, mesh: Mesh, n_nodes: int = 1 << 24,
+                 avg_degree: int = 5) -> Cell:
+    """One Δ-growing superstep on a roads-USA-scale synthetic graph."""
+    from repro.core.distributed import DistributedEngine
+    from repro.graph.structures import EdgeList
+
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    n = _round_up(n_nodes, n_dev)
+    e_loc = _round_up(n_nodes * avg_degree // n_dev, 8)
+
+    # build a tiny host-side plan, then OVERRIDE shapes to the target scale
+    # (shard_graph on 2^24 nodes host-side is feasible but slow; the dry-run
+    # only needs shapes) — we fabricate the ShardedGraph geometry directly.
+    import jax.numpy as jnp
+    from repro.core import distributed as dist
+
+    eng = object.__new__(DistributedEngine)
+    eng.mesh = mesh
+    eng.axes = tuple(mesh.axis_names)
+    eng.n_devices = n_dev
+    eng.comm = "allgather"
+    eng.graph = dist.ShardedGraph(
+        n_nodes=n, n_pad=n, n_devices=n_dev,
+        src=None, dst_local=None, weight=None, edge_mask=None,
+    )
+    # shapes only — arrays never touched in lower()
+    eng.graph.src = SDS((n_dev, e_loc), jnp.int32)
+    eng.graph.dst_local = SDS((n_dev, e_loc), jnp.int32)
+    eng.graph.weight = SDS((n_dev, e_loc), jnp.int32)
+    eng.graph.edge_mask = SDS((n_dev, e_loc), jnp.bool_)
+    eng.q = n // n_dev
+    eng._step = eng._build_superstep()
+
+    ns = NamedSharding(mesh, P(eng.axes))
+    es = NamedSharding(mesh, P(eng.axes, None))
+    planes = tuple(
+        SDS((n,), jnp.bool_ if i == 6 else jnp.int32, sharding=ns)
+        for i in range(7)
+    )
+    gparts = tuple(
+        SDS((n_dev, e_loc), dt, sharding=es)
+        for dt in (jnp.int32, jnp.int32, jnp.int32, jnp.bool_)
+    )
+
+    def superstep(planes, gparts):
+        return eng._step(planes, gparts, jnp.int32(1 << 20))
+
+    return Cell("paper-graph", f"n{n_nodes>>20}M", superstep,
+                (planes, gparts), None, 0.0,
+                note="one Delta-growing superstep (1 MR round)")
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, smoke: bool = False,
+               train_cfg: Optional[TrainConfig] = None) -> Cell:
+    cfg = get_arch(arch, smoke=smoke)
+    train_cfg = train_cfg or TrainConfig()
+    if isinstance(cfg, GraphEngineConfig):
+        return _engine_cell(cfg, mesh)
+    shapes = {s.name: s for s in shapes_for_family(cfg.family)}
+    shape = shapes[shape_name]
+    if isinstance(cfg, TransformerConfig):  # MoEConfig subclasses it
+        return _lm_cell(cfg, shape, mesh, train_cfg)
+    if isinstance(cfg, GNNConfig):
+        return _gnn_cell(cfg, shape, mesh, train_cfg)
+    if isinstance(cfg, RecsysConfig):
+        return _recsys_cell(cfg, shape, mesh, train_cfg)
+    raise TypeError(type(cfg))
+
+
+def all_cells() -> Tuple[Tuple[str, str], ...]:
+    """The 40 assigned (arch, shape) pairs."""
+    out = []
+    for arch in (
+        "gemma2-9b", "qwen1.5-32b", "mistral-nemo-12b", "moonshot-v1-16b-a3b",
+        "mixtral-8x7b",
+        "gcn-cora", "gatedgcn", "meshgraphnet", "equiformer-v2",
+        "xdeepfm",
+    ):
+        cfg = get_arch(arch)
+        for s in shapes_for_family(cfg.family):
+            out.append((arch, s.name))
+    return tuple(out)

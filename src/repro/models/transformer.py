@@ -1,0 +1,596 @@
+"""Decoder-only transformer family covering the five assigned LM archs.
+
+Pure-JAX (no flax): params are plain dict pytrees with layers STACKED on a
+leading [L] axis and the block applied via lax.scan — compile time and HLO
+size stay flat in depth (42-64-layer archs lower in seconds, and the HLO
+remains parseable for the collective-roofline pass).
+
+Variant coverage (per assigned config):
+  gemma2-9b          GQA, local/global alternating sliding window, attn +
+                     final logit soft-capping, GeGLU
+  qwen1.5-32b        QKV bias
+  mistral-nemo-12b   GQA, 128k rope
+  moonshot-v1-16b-a3b  MoE 64e top-6 (fine-grained d_ff) + GQA
+  mixtral-8x7b       MoE 8e top-2, sliding window
+
+MoE dispatch is capacity-based (GShard-style position-in-expert) so expert
+compute is dense per-expert GEMMs sharded over the 'model' axis (EP), and
+the dispatch/combine scatter-gathers become all-to-alls under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import MoEConfig, TransformerConfig
+from repro.kernels.flash_attention.ops import attention
+
+Params = Dict[str, Any]
+
+# Trace-time sharding constraints for the MoE dispatch path, set by the
+# launcher (launch/steps.py) before tracing. GSPMD otherwise replicates the
+# scatter/gather-based dispatch across the data axis and all-reduces
+# activation-sized f32 buffers in bwd (measured 33 s collective at
+# moonshot/train_4k). Keys: "x_disp" [G,E,C,d], "h" [G,Tg,d], "y" [G,E,C,d].
+MOE_CONSTRAINTS: Dict[str, Any] = {}
+
+# When set (by the launcher) to (mesh, capacity_factor), the MoE FFN runs the
+# explicit all-to-all shard_map path (models/moe_a2a.py) instead of GSPMD
+# scatter-dispatch. Requires T % n_chips == 0 and E % model-axis == 0.
+MOE_A2A: Any = None
+
+
+def _moe_constrain(name, t):
+    spec = MOE_CONSTRAINTS.get(name)
+    if spec is not None:
+        return jax.lax.with_sharding_constraint(t, spec)
+    return t
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Params:
+    """Stacked-layer param tree. Shapes chosen so the 'model' axis shards the
+    widest dim of every large tensor (see runtime/sharding.py)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv, L = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 12)
+
+    def norm_init(*shape):
+        return jnp.ones(shape, dt)
+
+    def dense_init(k, fan_in, *shape):
+        return (jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5)).astype(dt)
+
+    p: Params = {
+        "embed": dense_init(keys[0], int(1 / 0.02**2), cfg.vocab_size, d),
+        "final_norm": norm_init(d),
+        "layers": {
+            "attn_norm": norm_init(L, d),
+            "mlp_norm": norm_init(L, d),
+            "wq": dense_init(keys[1], d, L, d, hq * hd),
+            "wk": dense_init(keys[2], d, L, d, hkv * hd),
+            "wv": dense_init(keys[3], d, L, d, hkv * hd),
+            "wo": dense_init(keys[4], hq * hd, L, hq * hd, d),
+        },
+    }
+    if cfg.qkv_bias:
+        p["layers"]["bq"] = jnp.zeros((L, hq * hd), dt)
+        p["layers"]["bk"] = jnp.zeros((L, hkv * hd), dt)
+        p["layers"]["bv"] = jnp.zeros((L, hkv * hd), dt)
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(keys[5], d, d, cfg.vocab_size)
+
+    if isinstance(cfg, MoEConfig):
+        E, f = cfg.n_experts, cfg.d_ff
+        p["layers"]["router"] = dense_init(keys[6], d, L, d, E)
+        p["layers"]["w_gate"] = dense_init(keys[7], d, L, E, d, f)
+        p["layers"]["w_up"] = dense_init(keys[8], d, L, E, d, f)
+        p["layers"]["w_down"] = dense_init(keys[9], f, L, E, f, d)
+        if cfg.n_shared_experts:
+            fs = (cfg.d_ff_shared or cfg.d_ff) * cfg.n_shared_experts
+            p["layers"]["ws_gate"] = dense_init(keys[10], d, L, d, fs)
+            p["layers"]["ws_up"] = dense_init(keys[10], d, L, d, fs)
+            p["layers"]["ws_down"] = dense_init(keys[11], fs, L, fs, d)
+    else:
+        f = cfg.d_ff
+        p["layers"]["w_gate"] = dense_init(keys[6], d, L, d, f)
+        p["layers"]["w_up"] = dense_init(keys[7], d, L, d, f)
+        p["layers"]["w_down"] = dense_init(keys[8], f, L, f, d)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, Dh], pos int32 [S] (or [B, S] broadcastable)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs           # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                    # broadcast heads
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _layer_window(cfg: TransformerConfig, layer_idx: jnp.ndarray) -> jnp.ndarray:
+    """Per-layer sliding window size (0 = full attention) as traced int32."""
+    if cfg.local_global_alternating and cfg.sliding_window:
+        # gemma2: even layers local (sliding window), odd layers global
+        return jnp.where(layer_idx % 2 == 0, cfg.sliding_window, 0)
+    return jnp.full_like(layer_idx, cfg.sliding_window)
+
+
+def _decode_attention(q, k, v, kv_len, window: int, softcap: float, scale):
+    """Single-query attention against a (sharded) cache, GQA via grouped
+    einsum — no KV repeat, no O(S^2) tile. q [B, Hq, 1, D]; k/v [B, Hkv, S, D].
+    With the cache sharded on S this lowers to partial softmax + all-reduce
+    (sequence parallelism for decode)."""
+    B, Hq, _, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    mask = kpos[None, None, None, :] < kv_len
+    if window > 0:
+        mask &= kpos[None, None, None, :] > (kv_len - 1 - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def _attention_block(
+    x, lp, cfg: TransformerConfig, pos, kv_len, layer_window_static: int,
+    cache_kv=None, attn_impl: str = "blocked",
+):
+    """x [B, S, D]; cache_kv optional (k, v) [B, Hkv, Sc, Dh] for decode."""
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, hq, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    q = jnp.moveaxis(q, 2, 1)   # [B, H, S, Dh]
+    k = jnp.moveaxis(k, 2, 1)
+    v = jnp.moveaxis(v, 2, 1)
+
+    new_kv = (k, v)
+    q_offset = None
+    if cache_kv is not None:
+        ck, cv = cache_kv            # [B, Hkv, Sc, Dh]
+        # write the new row(s) at position kv_len - S ... kv_len - 1
+        start = kv_len - S
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, start, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, start, 0))
+        k, v = ck, cv
+        new_kv = (ck, cv)
+        q_offset = start
+
+    if cache_kv is not None and S == 1:
+        # decode hot path: grouped-einsum partial-softmax attention
+        o = _decode_attention(
+            q, k, v, kv_len, layer_window_static,
+            cfg.attn_logit_softcap, cfg.head_dim ** -0.5,
+        )
+    else:
+        o = attention(
+            q, k, v,
+            kv_len=kv_len, q_offset=q_offset,
+            causal=True, window=layer_window_static,
+            softcap=cfg.attn_logit_softcap,
+            scale=cfg.head_dim ** -0.5,
+            impl=attn_impl,
+        )
+    o = jnp.moveaxis(o, 1, 2).reshape(B, S, hq * hd)
+    return x + o @ lp["wo"], new_kv
+
+
+def _dense_mlp(x, lp, cfg):
+    h = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    g = _act(h @ lp["w_gate"], cfg.act) * (h @ lp["w_up"])
+    return x + g @ lp["w_down"]
+
+
+def _moe_mlp(x, lp, cfg: MoEConfig):
+    """Capacity-based top-k MoE with GROUP-LOCAL dispatch.
+
+    Returns (x_out, aux_loss). Tokens are split into ``cfg.moe_groups``
+    groups (set = the DP shard count by the launcher): each group routes its
+    own tokens into a group-local capacity buffer [G, E, C_g, D]. That keeps
+    the dispatch buffer sharded G -> 'data' and E (or the expert FFN width)
+    -> 'model'; GSPMD then lowers dispatch/combine to all-to-alls over the
+    EP axis. A single GLOBAL capacity buffer instead forces the scatter
+    result to be replicated across the data axis — measured 16x redundant
+    expert FLOPs + a 46 s collective term at mixtral/train_4k (§Perf).
+
+    Position-in-expert comes from a stable argsort (O(n log n)); the one-hot
+    cumsum alternative lowers to an O(n^2)-counted reduce-window.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+
+    if MOE_A2A is not None:
+        # a2a branch stays in [B, S, d] order: B-major/S-minor exactly
+        # matches the (data..., model) chip order, so the shard_map boundary
+        # is a zero-copy split. (The [G, Tg] group reshape below interleaves
+        # batch and sequence shardings — GSPMD copes on a 2-axis mesh but
+        # falls into involuntary rematerialization on the 3-axis pod mesh;
+        # measured 1.85 s -> 8.8 s collective before this bypass.)
+        from repro.models.moe_a2a import moe_ffn_a2a
+        mesh, cf = MOE_A2A
+        # pin entry AND exit to the residual-stream spec: without the exit
+        # pin, GSPMD back-propagates the flat 512-way token sharding through
+        # the [T,d]->[B,S,d] reshape into a 256-way-B x 2-way-S layout that
+        # the 3-axis mesh cannot transition out of (involuntary remat).
+        h2 = _moe_constrain("moe_out", rmsnorm(x, lp["mlp_norm"], cfg.norm_eps))
+        logits = (h2 @ lp["router"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, exp_idx = jax.lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+        me = jnp.mean(jax.nn.one_hot(exp_idx[..., 0], E, dtype=jnp.float32),
+                      axis=(0, 1))
+        aux = E * jnp.sum(me * jnp.mean(probs, axis=(0, 1)))
+        out = moe_ffn_a2a(
+            mesh, h2.reshape(T, d), exp_idx.reshape(T, k),
+            gate_vals.reshape(T, k),
+            lp["w_gate"], lp["w_up"], lp["w_down"],
+            act_fn=lambda t: _act(t, cfg.act), capacity_factor=cf,
+        ).reshape(B, S, d)
+        out = _moe_constrain("moe_out", out)  # set on pod meshes only
+        if cfg.n_shared_experts:
+            gs = _act(h2 @ lp["ws_gate"], cfg.act) * (h2 @ lp["ws_up"])
+            out = out + gs @ lp["ws_down"]
+        return x + out.astype(x.dtype), aux
+
+    G = cfg.moe_groups or 1
+    if T % G:
+        G = 1
+    Tg = T // G
+    h = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps).reshape(G, Tg, d)
+    h = _moe_constrain("h", h)
+
+    logits = (h @ lp["router"]).astype(jnp.float32)          # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, exp_idx = jax.lax.top_k(probs, k)             # [G, Tg, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch eq. 4), global mean
+    me = jnp.mean(jax.nn.one_hot(exp_idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    capacity = int(np.ceil(Tg * k / E * cfg.capacity_factor)) if Tg >= E else Tg
+    capacity = max(capacity, 4)
+
+    def route_group(exp_g, gate_g):
+        """Indices only (all [Tg*k] int/float vectors; cheap to vmap)."""
+        flat_e = exp_g.reshape(-1)                           # [Tg*k]
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e,
+                                     jnp.arange(E, dtype=flat_e.dtype))
+        pos_sorted = (jnp.arange(Tg * k, dtype=jnp.int32)
+                      - seg_start[sorted_e].astype(jnp.int32))
+        pos_in_e = jnp.zeros((Tg * k,), jnp.int32).at[order].set(pos_sorted)
+        keep = pos_in_e < capacity
+        gate_flat = gate_g.reshape(-1) * keep.astype(jnp.float32)
+        slot = jnp.where(keep, pos_in_e, capacity - 1)
+        return flat_e, slot, gate_flat, keep
+
+    flat_e, slot, gate_flat, keep = jax.vmap(route_group)(exp_idx, gate_vals)
+    tok_idx = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k)
+
+    # token gather OUTSIDE the vmap so its [G, Tg*k, d] result can be pinned
+    # (G->data, d unsharded); GSPMD otherwise d-shards it and bwd turns into
+    # activation-sized f32 all-reduce chains
+    h_tok = jnp.take_along_axis(
+        h, jnp.broadcast_to(tok_idx[None, :, None], (G, Tg * k, 1)), axis=1)
+    h_tok = _moe_constrain("h_tok", h_tok)
+    h_tok = h_tok * keep.astype(h_tok.dtype)[..., None]
+
+    def scatter_group(h_t, fe, sl):
+        x_disp = jnp.zeros((E, capacity, d), h_t.dtype)
+        return x_disp.at[fe, sl].add(h_t)
+
+    x_disp = jax.vmap(scatter_group)(h_tok, flat_e, slot)
+    # x_disp [G, E, C, d]: G -> data, E (or f) -> model
+    x_disp = _moe_constrain("x_disp", x_disp)
+
+    g = _act(jnp.einsum("gecd,edf->gecf", x_disp, lp["w_gate"]), cfg.act)
+    u = jnp.einsum("gecd,edf->gecf", x_disp, lp["w_up"])
+    y = jnp.einsum("gecf,efd->gecd", g * u, lp["w_down"])    # [G, E, C, d]
+    y = _moe_constrain("y", y)
+
+    y_tok = jax.vmap(lambda y_g, fe, sl: y_g[fe, sl])(y, flat_e, slot)
+    y_tok = _moe_constrain("h_tok", y_tok)                   # [G, Tg*k, d]
+    y_tok = y_tok * gate_flat[..., None]
+
+    out = jax.vmap(
+        lambda yt: jax.ops.segment_sum(yt, tok_idx, num_segments=Tg)
+    )(y_tok)                                                  # [G, Tg, d]
+    out = _moe_constrain("h", out)
+
+    if cfg.n_shared_experts:
+        gs = _act(h @ lp["ws_gate"], cfg.act) * (h @ lp["ws_up"])
+        out = out + gs @ lp["ws_down"]
+    return x + out.reshape(B, S, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _split_windows(cfg) -> Tuple[int, int]:
+    """(even_layer_window, odd_layer_window) — static per scan branch."""
+    if cfg.local_global_alternating and cfg.sliding_window:
+        return cfg.sliding_window, 0
+    return cfg.sliding_window, cfg.sliding_window
+
+
+def forward_hidden(
+    params: Params,
+    tokens: jnp.ndarray,            # int32 [B, S]
+    cfg: TransformerConfig,
+    attn_impl: str = "blocked",
+    act_spec=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Backbone only: returns (hidden [B, S, D] post-final-norm, aux_loss).
+
+    ``act_spec`` (a PartitionSpec, resolved against the ambient mesh) is the
+    Megatron-SP trick: the residual stream between layers is sharded over the
+    TP axis on the SEQUENCE dim, so the remat-saved per-layer carries scale
+    down with TP world size (without it a 42-layer 4k x 16/device run keeps
+    ~20 GB of carries per chip). GSPMD re-gathers inside the attention/MLP
+    where TP already pays that collective.
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, _dtype(cfg))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    kv_len = jnp.int32(S)
+    w_even, w_odd = _split_windows(cfg)
+    is_moe = isinstance(cfg, MoEConfig)
+
+    constrain = (
+        (lambda t: jax.lax.with_sharding_constraint(t, act_spec))
+        if act_spec is not None else (lambda t: t)
+    )
+    x = constrain(x)
+
+    def block(x, lp_idx):
+        lp, idx = lp_idx
+
+        def run(window: int, x):
+            x, _ = _attention_block(x, lp, cfg, pos, kv_len, window,
+                                    attn_impl=attn_impl)
+            if is_moe:
+                return _moe_mlp(x, lp, cfg)
+            return _dense_mlp(x, lp, cfg), jnp.float32(0)
+
+        if w_even == w_odd:
+            x, aux = run(w_even, x)
+        else:
+            x, aux = jax.lax.cond(
+                idx % 2 == 0, partial(run, w_even), partial(run, w_odd), x
+            )
+        return constrain(x), aux
+
+    if cfg.remat != "none":
+        block = jax.checkpoint(block)
+
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(
+            lambda x, lp: block(x, lp), x, (params["layers"], layer_ids)
+        )
+        aux = auxs.mean()
+    else:
+        # unrolled path: resolve the local/global branch STATICALLY so the
+        # HLO has no conditionals (exact cost_analysis for the roofline fit)
+        aux = jnp.float32(0)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            win = w_even if i % 2 == 0 else w_odd
+            x, _ = _attention_block(x, lp, cfg, pos, kv_len, win,
+                                    attn_impl=attn_impl)
+            if is_moe:
+                x, a = _moe_mlp(x, lp, cfg)
+                aux = aux + a / cfg.n_layers
+            else:
+                x = _dense_mlp(x, lp, cfg)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def _unembed_logits(params, x, cfg) -> jnp.ndarray:
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def forward(params, tokens, cfg, attn_impl: str = "blocked", act_spec=None):
+    """Full forward with logits (prefill / small shapes)."""
+    x, aux = forward_hidden(params, tokens, cfg, attn_impl=attn_impl,
+                            act_spec=act_spec)
+    return _unembed_logits(params, x, cfg), aux
+
+
+def lm_loss(params, batch, cfg, attn_impl: str = "blocked",
+            loss_chunks: int = 0, act_spec=None):
+    """Next-token cross-entropy, CHUNKED over the sequence: the [B, S_c, V]
+    logits tile is produced, reduced to per-token NLL, and freed (recomputed
+    in bwd via jax.checkpoint) chunk by chunk — the full [B, S, V] f32 logits
+    tensor never exists. labels = tokens shifted; -1 masks a position."""
+    x, aux = forward_hidden(params, batch["tokens"], cfg, attn_impl=attn_impl,
+                            act_spec=act_spec)
+    labels = batch["labels"]
+    B, S = labels.shape
+    n_chunks = loss_chunks or cfg.loss_chunks or (8 if S >= 2048 else 1)
+    while S % n_chunks:
+        n_chunks -= 1
+
+    @jax.checkpoint
+    def chunk_nll(params, x_c, labels_c):
+        logits = _unembed_logits(params, x_c, cfg)     # [B, S_c, V]
+        mask = labels_c >= 0
+        lab = jnp.where(mask, labels_c, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        return nll.sum(), mask.sum()
+
+    sc = S // n_chunks
+    if n_chunks == 1:
+        tot, cnt = chunk_nll(params, x, labels)
+    else:
+        # scan (not a python loop) so the [B, S_c, V] logits buffer is
+        # assigned ONCE and reused across chunks
+        xc = jnp.moveaxis(x.reshape(B, n_chunks, sc, -1), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(B, n_chunks, sc), 1, 0)
+
+        def body(carry, xs):
+            t0, n0 = carry
+            t, n = chunk_nll(params, xs[0], xs[1])
+            return (t0 + t, n0 + n), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.float32(0), jnp.int32(0)), (xc, lc))
+    loss = tot / jnp.maximum(cnt, 1)
+    if isinstance(cfg, MoEConfig):
+        loss = loss + cfg.router_aux_loss * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> Params:
+    """[L, B, Hkv, S, Dh] stacked cache (scan-compatible)."""
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, _dtype(cfg)),
+        "v": jnp.zeros(shape, _dtype(cfg)),
+        "len": jnp.int32(0),
+    }
+
+
+def decode_step(
+    params: Params,
+    cache: Params,
+    tokens: jnp.ndarray,            # int32 [B, 1] the newest token
+    cfg: TransformerConfig,
+    attn_impl: str = "blocked",
+) -> Tuple[jnp.ndarray, Params]:
+    """One serve step: append token, attend to the cache, emit logits."""
+    B = tokens.shape[0]
+    new_len = cache["len"] + 1
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, _dtype(cfg))
+    pos = (new_len - 1) * jnp.ones((1,), jnp.int32)
+    w_even, w_odd = _split_windows(cfg)
+    is_moe = isinstance(cfg, MoEConfig)
+
+    def block(x, lp_kv_idx):
+        lp, ck, cv, idx = lp_kv_idx
+
+        def run(window: int, x):
+            x, (nk, nv) = _attention_block(
+                x, lp, cfg, pos, new_len, window, cache_kv=(ck, cv),
+                attn_impl=attn_impl,
+            )
+            if is_moe:
+                x, _ = _moe_mlp(x, lp, cfg)
+            else:
+                x = _dense_mlp(x, lp, cfg)
+            return x, nk, nv
+
+        if w_even == w_odd:
+            x, nk, nv = run(w_even, x)
+        else:
+            x, nk, nv = jax.lax.cond(
+                idx % 2 == 0, partial(run, w_even), partial(run, w_odd), x
+            )
+        return x, (nk, nv)
+
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(
+            block, x, (params["layers"], cache["k"], cache["v"], layer_ids)
+        )
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            win = w_even if i % 2 == 0 else w_odd   # static branch
+            x, (k1, v1) = _attention_block(
+                x, lp, cfg, pos, new_len, win,
+                cache_kv=(cache["k"][i], cache["v"][i]), attn_impl=attn_impl,
+            )
+            if is_moe:
+                x, _ = _moe_mlp(x, lp, cfg)
+            else:
+                x = _dense_mlp(x, lp, cfg)
+            nks.append(k1)
+            nvs.append(v1)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits[:, 0], {"k": nk, "v": nv, "len": new_len}
+
+
+def prefill_step(params, tokens, cfg, attn_impl: str = "blocked",
+                 act_spec=None):
+    """Serve prefill = full-sequence forward, no grads (the prefill_32k cell
+    lowers this); steady-state decode lowers decode_step."""
+    logits, _ = forward(params, tokens, cfg, attn_impl=attn_impl,
+                        act_spec=act_spec)
+    return logits

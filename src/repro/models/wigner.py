@@ -1,0 +1,180 @@
+"""Real-spherical-harmonic Wigner rotation matrices (Ivanic-Ruedenberg).
+
+EquiformerV2's eSCN trick rotates each edge's irrep features so the edge
+direction aligns with +z; the SO(3) tensor-product convolution then reduces
+to independent SO(2) mixes per |m| (O(L^3) instead of O(L^6)). The rotation
+is the block-diagonal Wigner-D in the REAL spherical harmonic basis.
+
+We precompute, per l, the SPARSE bilinear recursion of Ivanic & Ruedenberg
+(J. Phys. Chem. 1996, + 1998 erratum): D^l = M_l(r (x) D^{l-1}) where r is
+the l=1 rotation (a permuted copy of the 3x3 rotation matrix) — host-side
+index/coefficient tables, evaluated on device as gather-multiply-segment_sum
+batched over edges. Trace-time cost is O(1); runtime cost O(E * nnz_l).
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _d1_index(m: int) -> int:
+    """Real-SH l=1 ordering m=-1,0,1 -> cartesian (y, z, x) row of R."""
+    return {-1: 1, 0: 2, 1: 0}[m]
+
+
+def _delta(a, b) -> float:
+    return 1.0 if a == b else 0.0
+
+
+@lru_cache(maxsize=None)
+def _l_recursion_table(l: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Sparse map for D^l from (r, D^{l-1}).
+
+    Returns (r_idx, d_idx, coeff, out_idx): each term contributes
+      coeff * r_flat[r_idx] * Dprev_flat[d_idx]  to  D_flat[out_idx].
+    Index layout: r_flat = r[(i+1)*3 + (j+1)] for i,j in -1..1;
+    Dprev_flat over (2l-1)^2 with m in -l+1..l-1; D_flat over (2l+1)^2.
+    """
+    terms: List[Tuple[int, int, float, int]] = []
+    n_prev = 2 * l - 1
+
+    def ridx(i: int, j: int) -> int:
+        return (i + 1) * 3 + (j + 1)
+
+    def didx(mu: int, m: int) -> int:
+        return (mu + l - 1) * n_prev + (m + l - 1)
+
+    def P(i: int, mu: int, m2: int) -> List[Tuple[int, int, float]]:
+        """Expansion of the paper's P function into (r_idx, d_idx, coeff)."""
+        if m2 == l:
+            return [
+                (ridx(i, 1), didx(mu, l - 1), 1.0),
+                (ridx(i, -1), didx(mu, -l + 1), -1.0),
+            ]
+        if m2 == -l:
+            return [
+                (ridx(i, 1), didx(mu, -l + 1), 1.0),
+                (ridx(i, -1), didx(mu, l - 1), 1.0),
+            ]
+        return [(ridx(i, 0), didx(mu, m2), 1.0)]
+
+    for m1 in range(-l, l + 1):
+        for m2 in range(-l, l + 1):
+            out = (m1 + l) * (2 * l + 1) + (m2 + l)
+            denom = float((l + m2) * (l - m2)) if abs(m2) < l else float(2 * l * (2 * l - 1))
+            u = np.sqrt((l + m1) * (l - m1) / denom)
+            v = 0.5 * np.sqrt(
+                (1 + _delta(m1, 0)) * (l + abs(m1) - 1) * (l + abs(m1)) / denom
+            ) * (1 - 2 * _delta(m1, 0))
+            w = -0.5 * np.sqrt(
+                (l - abs(m1) - 1) * (l - abs(m1)) / denom
+            ) * (1 - _delta(m1, 0))
+
+            parts: List[Tuple[int, int, float]] = []
+            if u:
+                parts += [(r, d, u * c) for r, d, c in P(0, m1, m2)]
+            if v:
+                if m1 == 0:
+                    sub = P(1, 1, m2) + P(-1, -1, m2)
+                elif m1 > 0:
+                    sub = [(r, d, c * np.sqrt(1 + _delta(m1, 1)))
+                           for r, d, c in P(1, m1 - 1, m2)]
+                    sub += [(r, d, -c * (1 - _delta(m1, 1)))
+                            for r, d, c in P(-1, -m1 + 1, m2)]
+                else:
+                    sub = [(r, d, c * (1 - _delta(m1, -1)))
+                           for r, d, c in P(1, m1 + 1, m2)]
+                    sub += [(r, d, c * np.sqrt(1 + _delta(m1, -1)))
+                            for r, d, c in P(-1, -m1 - 1, m2)]
+                parts += [(r, d, v * c) for r, d, c in sub]
+            if w and m1 != 0:
+                if m1 > 0:
+                    sub = P(1, m1 + 1, m2) + P(-1, -m1 - 1, m2)
+                else:
+                    sub = [(r, d, c) for r, d, c in P(1, m1 - 1, m2)]
+                    sub += [(r, d, -c) for r, d, c in P(-1, -m1 + 1, m2)]
+                parts += [(r, d, w * c) for r, d, c in sub]
+
+            terms += [(r, d, c, out) for r, d, c in parts if c != 0.0]
+
+    r_idx = np.array([t[0] for t in terms], np.int32)
+    d_idx = np.array([t[1] for t in terms], np.int32)
+    coeff = np.array([t[2] for t in terms], np.float32)
+    out_idx = np.array([t[3] for t in terms], np.int32)
+    return r_idx, d_idx, coeff, out_idx
+
+
+def rotation_to_d1(rot: jnp.ndarray) -> jnp.ndarray:
+    """3x3 cartesian rotation(s) [..., 3, 3] -> l=1 real-SH rotation r."""
+    perm = np.array([_d1_index(m) for m in (-1, 0, 1)])
+    return rot[..., perm, :][..., :, perm]
+
+
+@partial(jax.jit, static_argnames=("l_max",))
+def wigner_d_stack(rot: jnp.ndarray, l_max: int) -> List[jnp.ndarray]:
+    """Per-l Wigner-D blocks for a batch of rotations.
+
+    rot [E, 3, 3] -> list of [E, 2l+1, 2l+1] for l = 0..l_max.
+    """
+    E = rot.shape[0]
+    r = rotation_to_d1(rot)                    # [E, 3, 3]
+    r_flat = r.reshape(E, 9)
+    blocks = [jnp.ones((E, 1, 1), rot.dtype), r]
+    d_prev = r
+    for l in range(2, l_max + 1):
+        ri, di, cf, oi = _l_recursion_table(l)
+        vals = (
+            r_flat[:, ri]
+            * d_prev.reshape(E, -1)[:, di]
+            * jnp.asarray(cf)[None, :]
+        )
+        d_l = jax.ops.segment_sum(
+            vals.T, jnp.asarray(oi), num_segments=(2 * l + 1) ** 2
+        ).T.reshape(E, 2 * l + 1, 2 * l + 1)
+        blocks.append(d_l)
+        d_prev = d_l
+    return blocks
+
+
+def edge_rotation(vec: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """Rotation matrices aligning each edge vector with +z.
+
+    vec [E, 3] -> R [E, 3, 3] with R @ (vec/|vec|) = z. Uses the Rodrigues
+    construction; degenerate (anti)parallel cases fall back to diag(1,-1,-1).
+    """
+    n = vec / (jnp.linalg.norm(vec, axis=-1, keepdims=True) + eps)
+    z = jnp.array([0.0, 0.0, 1.0], vec.dtype)
+    v = jnp.cross(n, jnp.broadcast_to(z, n.shape))      # rotation axis * sin
+    c = n[..., 2]                                       # cos(theta)
+    vx = jnp.zeros(n.shape[:-1] + (3, 3), vec.dtype)
+    vx = vx.at[..., 0, 1].set(-v[..., 2]).at[..., 0, 2].set(v[..., 1])
+    vx = vx.at[..., 1, 0].set(v[..., 2]).at[..., 1, 2].set(-v[..., 0])
+    vx = vx.at[..., 2, 0].set(-v[..., 1]).at[..., 2, 1].set(v[..., 0])
+    eye = jnp.eye(3, dtype=vec.dtype)
+    k = 1.0 / jnp.maximum(1.0 + c, eps)
+    r = eye + vx + (vx @ vx) * k[..., None, None]
+    flip = jnp.diag(jnp.array([1.0, -1.0, -1.0], vec.dtype))
+    anti = (c < -1.0 + 1e-6)[..., None, None]
+    return jnp.where(anti, flip, r)
+
+
+def rotate_irreps(feat: jnp.ndarray, blocks: List[jnp.ndarray],
+                  transpose: bool = False) -> jnp.ndarray:
+    """Apply block-diagonal Wigner-D to irrep features.
+
+    feat [E, K, C] with K = (l_max+1)^2 (real-SH coefficient order
+    l ascending, m = -l..l within l); blocks from wigner_d_stack.
+    """
+    outs = []
+    off = 0
+    for l, d in enumerate(blocks):
+        k = 2 * l + 1
+        f = feat[:, off : off + k]
+        dm = jnp.swapaxes(d, -1, -2) if transpose else d
+        outs.append(jnp.einsum("eij,ejc->eic", dm, f))
+        off += k
+    return jnp.concatenate(outs, axis=1)

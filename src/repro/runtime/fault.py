@@ -1,0 +1,97 @@
+"""Fault tolerance: preemption handling, retries, straggler mitigation.
+
+Mechanisms (all exercised by tests):
+  * PreemptionGuard — SIGTERM/SIGINT sets a flag; the training loop
+    checkpoints and exits cleanly at the next step boundary.
+  * retriable() — exponential-backoff retry wrapper for transient device /
+    filesystem errors (the restart path re-enters from the last checkpoint).
+  * StragglerMonitor — per-step wall-time EWMA; steps slower than
+    `threshold x` the EWMA are logged with the step payload so an external
+    scheduler can re-shard or evict the slow host. The data pipeline
+    over-decomposes shards 4x (data/pipeline.py) so rebalancing is possible
+    without re-sharding model state.
+  * The paper's own `stop` rule is a SEMANTIC straggler cut: a growth phase
+    ends when half the frontier is covered instead of waiting for the
+    slowest tail of the wave (Table 2 shows the accuracy cost is negligible).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.common import get_logger
+
+log = get_logger("repro.fault")
+
+
+class PreemptionGuard:
+    """SIGTERM-aware context: `guard.should_stop` flips on preemption."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._signals = signals
+        self._prev = {}
+        self.should_stop = False
+        self.received: Optional[int] = None
+
+    def _handler(self, signum, frame):
+        self.should_stop = True
+        self.received = signum
+        log.warning("preemption signal %s received; will checkpoint and exit", signum)
+
+    def __enter__(self) -> "PreemptionGuard":
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+
+
+def retriable(fn: Callable, retries: int = 3, base_delay: float = 0.1,
+              exceptions=(OSError, IOError, RuntimeError)):
+    """Exponential-backoff wrapper for transient failures."""
+
+    def wrapped(*args, **kwargs):
+        delay = base_delay
+        for attempt in range(retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except exceptions as e:
+                if attempt == retries:
+                    raise
+                log.warning("attempt %d failed (%s); retrying in %.2fs",
+                            attempt + 1, e, delay)
+                time.sleep(delay)
+                delay *= 2
+
+    return wrapped
+
+
+@dataclass
+class StragglerMonitor:
+    """EWMA step timing; flags outlier steps (straggling hosts/steps)."""
+
+    threshold: float = 2.0
+    alpha: float = 0.1
+    ewma: float = 0.0
+    n: int = 0
+    flagged: List[int] = field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        if self.n >= 3 and seconds > self.threshold * self.ewma:
+            self.flagged.append(step)
+            log.warning(
+                "straggler: step %d took %.3fs (%.1fx EWMA %.3fs)",
+                step, seconds, seconds / max(self.ewma, 1e-9), self.ewma,
+            )
+            slow = True
+        else:
+            slow = False
+        self.ewma = seconds if self.n == 0 else (
+            (1 - self.alpha) * self.ewma + self.alpha * seconds
+        )
+        self.n += 1
+        return slow

@@ -1,0 +1,173 @@
+"""Per-family sharding rules: param / data / state PartitionSpec trees.
+
+Mesh semantics (launch/mesh.py):
+  single pod  (16, 16)      axes ("data", "model")
+  multi-pod   (2, 16, 16)   axes ("pod", "data", "model") — 'pod' joins the
+                            data-parallel axes by default (DP over pods);
+                            runtime/pipeline.py can claim it for PP instead.
+
+LM params are stacked [L, ...]: the layer axis never shards (it is the scan
+axis); the widest non-layer dim takes 'model' (TP). MoE experts shard over
+'model' (EP). GNN full-graph shards nodes/edges over the whole flat mesh.
+Recsys shards embedding rows over 'model' and the batch over data axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import (
+    ArchConfig,
+    GNNConfig,
+    MoEConfig,
+    RecsysConfig,
+    ShapeSpec,
+    TransformerConfig,
+)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All data-parallel axes ('pod' + 'data' when multi-pod)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def flat_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg: TransformerConfig, mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpec tree matching models/transformer.init_params."""
+    m = "model"
+    layers: Dict[str, P] = {
+        "attn_norm": P(None, None),
+        "mlp_norm": P(None, None),
+        "wq": P(None, None, m),      # column-parallel
+        "wk": P(None, None, m),
+        "wv": P(None, None, m),
+        "wo": P(None, m, None),      # row-parallel (all-reduce after)
+    }
+    if cfg.qkv_bias:
+        layers |= {"bq": P(None, m), "bk": P(None, m), "bv": P(None, m)}
+    if isinstance(cfg, MoEConfig):
+        # EP when the expert count divides the model axis; otherwise TP the
+        # expert FFN width (mixtral: 8 experts on a 16-wide axis)
+        if cfg.n_experts % mesh.shape[m] == 0:
+            e_gate, e_down = P(None, m, None, None), P(None, m, None, None)
+        else:
+            e_gate, e_down = P(None, None, None, m), P(None, None, m, None)
+        layers |= {
+            "router": P(None, None, None),
+            "w_gate": e_gate,
+            "w_up": e_gate,
+            "w_down": e_down,
+        }
+        if cfg.n_shared_experts:
+            layers |= {
+                "ws_gate": P(None, None, m),
+                "ws_up": P(None, None, m),
+                "ws_down": P(None, m, None),
+            }
+    else:
+        layers |= {
+            "w_gate": P(None, None, m),
+            "w_up": P(None, None, m),
+            "w_down": P(None, m, None),
+        }
+    specs: Dict[str, Any] = {
+        "embed": P(m, None),          # vocab-sharded
+        "final_norm": P(None),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, m)
+    return specs
+
+
+def lm_batch_specs(mesh: Mesh) -> Dict[str, P]:
+    d = data_axes(mesh)
+    return {"tokens": P(d, None), "labels": P(d, None)}
+
+
+def lm_cache_specs(cfg: TransformerConfig, mesh: Mesh, batch: int) -> Dict[str, Any]:
+    """KV cache [L, B, Hkv, S, Dh]. decode_32k shards B over data axes; the
+    long_500k cell (B=1) shards the SEQUENCE over the flat mesh instead
+    (sequence parallelism for the cache — see DESIGN.md)."""
+    d = data_axes(mesh)
+    if batch == 1:
+        spec = P(None, None, None, d + ("model",), None)   # SP over cache len
+    else:
+        spec = P(None, d, None, "model", None)
+    return {"k": spec, "v": spec, "len": P()}
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(params, mesh: Mesh):
+    """GNN weights are small (<= few MB): replicate everything."""
+    return jax.tree.map(lambda _: P(), params)
+
+
+def gnn_graph_specs(mesh: Mesh, minibatch: bool = False) -> Dict[str, P]:
+    flat = flat_axes(mesh)
+    d = data_axes(mesh)
+    if minibatch:
+        # sampled blocks: batch-of-seeds over data axes, big padded node/edge
+        # tables over the flat mesh
+        return {
+            "x": P(flat, None), "src": P(flat), "dst": P(flat),
+            "labels": P(flat), "seed_slots": P(d),
+        }
+    return {
+        "x": P(flat, None), "src": P(flat), "dst": P(flat),
+        "labels": P(flat), "pos": P(flat, None), "e": P(flat, None),
+        "graph_id": P(flat), "targets": P(flat, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Recsys
+# ---------------------------------------------------------------------------
+
+def recsys_param_specs(cfg: RecsysConfig, mesh: Mesh):
+    return {
+        "tables": P(None, "model", None),   # row-sharded vocab
+        "linear": P(None, "model"),
+        "cin": [P() for _ in cfg.cin_layers],
+        "cin_out": P(),
+        "mlp": [{"w": P(), "b": P()} for _ in range(len(cfg.mlp_dims) + 1)],
+        "bias": P(),
+    }
+
+
+def recsys_batch_specs(mesh: Mesh) -> Dict[str, P]:
+    d = data_axes(mesh)
+    return {
+        "ids": P(d, None, None),
+        "id_mask": P(d, None, None),
+        "dense": P(d, None),
+        "labels": P(d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def named(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

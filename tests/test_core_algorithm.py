@@ -1,0 +1,178 @@
+"""Correctness of the paper's algorithms: CLUSTER/CLUSTER2 invariants,
+quotient conservativeness, SSSP oracles, hypothesis property tests."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    approximate_diameter,
+    bellman_ford,
+    build_quotient,
+    cluster,
+    cluster2,
+    delta_stepping,
+    diameter_2approx_sssp,
+    quotient_diameter,
+)
+from repro.core.quotient import quotient_diameter_minplus
+from repro.graph import grid_mesh, random_connected, road_like, social_like
+from repro.graph.structures import EdgeList, to_scipy_csr
+
+
+def _true_sssp(edges, source):
+    from scipy.sparse.csgraph import dijkstra
+    return dijkstra(to_scipy_csr(edges), directed=False, indices=source)
+
+
+def _true_diameter(edges):
+    from scipy.sparse.csgraph import shortest_path
+    d = shortest_path(to_scipy_csr(edges), method="D", directed=False)
+    fin = d[np.isfinite(d)]
+    return int(fin.max())
+
+
+# ---------------------------------------------------------------------------
+# SSSP baselines vs scipy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen,kw", [
+    (grid_mesh, dict(side=12, weight_dist="uniform", high=50)),
+    (random_connected, dict(n=300, n_edges=900, weight_dist="uniform", high=1000)),
+])
+def test_bellman_ford_matches_dijkstra(gen, kw):
+    g = gen(**kw, seed=3)
+    res = bellman_ford(g, 0)
+    truth = _true_sssp(g, 0)
+    finite = np.isfinite(truth)
+    np.testing.assert_array_equal(res.dist[finite], truth[finite].astype(np.int64))
+
+
+def test_delta_stepping_matches_bellman_ford():
+    g = random_connected(200, 800, seed=5, weight_dist="uniform", high=100)
+    bf = bellman_ford(g, 7)
+    ds = delta_stepping(g, 7, delta=50)
+    np.testing.assert_array_equal(bf.dist, ds.dist)
+
+
+def test_sssp_2approx_bounds():
+    g = grid_mesh(10, "unit")
+    lb, ub, _ = diameter_2approx_sssp(g)
+    true = _true_diameter(g)
+    assert lb <= true <= ub
+
+
+# ---------------------------------------------------------------------------
+# CLUSTER invariants (paper Lemma 1 / Theorem 1 structure)
+# ---------------------------------------------------------------------------
+
+def _check_decomposition(g: EdgeList, dec, tau):
+    n = g.n_nodes
+    # partition: every node assigned, centers self-assigned
+    assert dec.final_c.shape == (n,)
+    assert (dec.final_c >= 0).all() and (dec.final_c < n).all()
+    centers = np.unique(dec.final_c)
+    assert (dec.final_c[centers] == centers).all(), "center must own itself"
+    # radius = max dist upper bound; per-node pathw upper-bounds true dist
+    assert dec.radius == dec.final_pathw.max()
+    # pathw is an upper bound on the true distance to the center
+    from scipy.sparse.csgraph import dijkstra
+    csr = to_scipy_csr(g)
+    some = np.random.default_rng(0).choice(centers, size=min(5, len(centers)),
+                                           replace=False)
+    d_true = dijkstra(csr, directed=False, indices=some)
+    for i, c in enumerate(some):
+        mine = dec.final_c == c
+        assert (dec.final_pathw[mine] >= d_true[i][mine] - 1e-6).all()
+
+
+@pytest.mark.parametrize("variant", ["stop", "complete"])
+def test_cluster_partition_invariants(variant):
+    g = social_like(9, 6, seed=2, weight_dist="uniform", high=2**16)
+    tau = 8
+    dec = cluster(g, tau, variant=variant, seed=4)
+    _check_decomposition(g, dec, tau)
+
+
+def test_cluster2_partition_invariants():
+    g = grid_mesh(20, "uniform", high=100, seed=6)
+    dec = cluster2(g, 8, seed=1)
+    _check_decomposition(g, dec, 8)
+
+
+def test_semantic_contraction_equals_restart():
+    """Optimization (2) (continue clustering across Delta doublings through
+    relay edges) must keep radii bounded by delta_end * stages — and coverage
+    must be a superset of what one fresh PartialGrowth at delta_end reaches."""
+    g = grid_mesh(24, "bimodal", heavy_w=500, heavy_p=0.15, seed=9)
+    dec = cluster(g, 12, seed=3)
+    # every covered node's realized path weight is consistent: <= stages * delta_end
+    assert dec.final_pathw.max() <= dec.n_stages * dec.delta_end + 1
+
+
+# ---------------------------------------------------------------------------
+# Diameter approximation (paper Theorem 2: conservative, ratio small)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen,kw,tau", [
+    (grid_mesh, dict(side=24, weight_dist="uniform", high=100), 16),
+    (grid_mesh, dict(side=24, weight_dist="bimodal", heavy_w=10_000), 16),
+    (social_like, dict(n_log2=9, edge_factor=8, weight_dist="uniform", high=2**20), 8),
+    (road_like, dict(n=2000), 12),
+])
+def test_diameter_conservative_and_tight(gen, kw, tau):
+    g = gen(**kw, seed=11)
+    est = approximate_diameter(g, tau=tau)
+    true = _true_diameter(g)
+    assert est.phi_approx >= true, "estimate must be conservative"
+    assert est.phi_approx <= 3.0 * true, (
+        f"ratio {est.phi_approx / true:.2f} way beyond the paper's <=1.5 band"
+    )
+
+
+def test_quotient_minplus_matches_scipy():
+    g = social_like(8, 6, seed=13, weight_dist="uniform", high=1000)
+    dec = cluster(g, 6, seed=0)
+    q = build_quotient(g, dec)
+    d1, connected = quotient_diameter(q)
+    d2 = quotient_diameter_minplus(q)
+    assert connected
+    assert d1 == d2
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(20, 120),
+    ef=st.integers(2, 5),
+    tau=st.integers(2, 10),
+    seed=st.integers(0, 10_000),
+    wmax=st.sampled_from([1, 10, 1000, 2**20]),
+)
+def test_property_decomposition(n, ef, tau, seed, wmax):
+    g = random_connected(n, n * ef, seed=seed, weight_dist="uniform", high=wmax)
+    dec = cluster(g, tau, seed=seed)
+    # partition covers all nodes; radius consistent; steps bounded by paper's
+    # O(min(n/tau, l) log n) with a generous constant
+    assert len(dec.final_c) == g.n_nodes
+    centers = np.unique(dec.final_c)
+    assert (dec.final_c[centers] == centers).all()
+    logn = math.log2(max(n, 2))
+    assert dec.growing_steps <= 4 * (2 * n / tau) * (logn + 1) + 64
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    side=st.integers(4, 12),
+    seed=st.integers(0, 10_000),
+    heavy_p=st.floats(0.0, 0.3),
+)
+def test_property_diameter_conservative(side, seed, heavy_p):
+    g = grid_mesh(side, "bimodal", heavy_w=997, heavy_p=heavy_p, seed=seed)
+    est = approximate_diameter(g, tau=4)
+    assert est.phi_approx >= _true_diameter(g)

@@ -1,0 +1,154 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.cin.ops import cin_layer
+from repro.kernels.edge_relax.ops import block_edges_host, edge_relax
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.segment_mm.ops import segment_mm
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# edge_relax
+# ---------------------------------------------------------------------------
+
+def _mk_relax_problem(n, e, wmax, covered_frac, live_frac, seed):
+    r = np.random.default_rng(seed)
+    src = r.integers(0, n, e).astype(np.int32)
+    dst = r.integers(0, n, e).astype(np.int32)
+    w = r.integers(1, wmax + 1, e).astype(np.int32)
+    blk = block_edges_host(src, dst, w, n)
+    n_pad = blk["n_pad_nodes"]
+    INF, BIG = 2**31 - 1, 2**30
+    d = np.full(n_pad, INF, np.int32)
+    live = r.random(n_pad) < live_frac
+    d[live] = r.integers(0, 2 * wmax, live.sum())
+    c = np.full(n_pad, INF, np.int32); c[live] = r.integers(0, n, live.sum())
+    p = np.full(n_pad, INF, np.int32); p[live] = d[live]
+    rw0 = np.full(n_pad, BIG, np.int32)
+    cov = (r.random(n_pad) < covered_frac) & ~live
+    rw0[cov] = r.integers(-wmax, 1, cov.sum())
+    rc = np.full(n_pad, INF, np.int32); rc[cov] = r.integers(0, n, cov.sum())
+    rp = np.full(n_pad, INF, np.int32); rp[cov] = r.integers(0, 4 * wmax, cov.sum())
+    planes = tuple(jnp.asarray(x) for x in (d, c, p, rw0, rc, rp))
+    args = (planes, jnp.asarray(blk["src"]), jnp.asarray(blk["dst"]),
+            jnp.asarray(blk["w"]), jnp.asarray(blk["mask"]),
+            jnp.asarray(blk["block_tile"]), jnp.int32(wmax), blk["n_tiles"])
+    return args
+
+
+@pytest.mark.parametrize("n,e,wmax", [
+    (100, 400, 16), (700, 3000, 100), (1500, 2000, 2**20), (63, 4000, 7),
+])
+def test_edge_relax_matches_ref(n, e, wmax):
+    args = _mk_relax_problem(n, e, wmax, 0.2, 0.3, seed=n + e)
+    ref = edge_relax(*args, impl="ref")
+    pal = edge_relax(*args, impl="interpret")
+    for name, r_, p_ in zip("dcp", ref, pal):
+        m = min(len(r_), len(p_))
+        np.testing.assert_array_equal(np.asarray(r_)[:m], np.asarray(p_)[:m],
+                                      err_msg=f"plane {name}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(16, 400), e=st.integers(16, 1200),
+       wmax=st.sampled_from([3, 50, 1 << 16]), seed=st.integers(0, 999))
+def test_edge_relax_property(n, e, wmax, seed):
+    args = _mk_relax_problem(n, e, wmax, 0.25, 0.25, seed)
+    ref = edge_relax(*args, impl="ref")
+    pal = edge_relax(*args, impl="interpret")
+    m = min(len(ref[0]), len(pal[0]))
+    for r_, p_ in zip(ref, pal):
+        np.testing.assert_array_equal(np.asarray(r_)[:m], np.asarray(p_)[:m])
+
+
+# ---------------------------------------------------------------------------
+# flash attention sweep
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # B, Hq, Hkv, Sq, Skv, D, causal, window, softcap, dtype
+    (2, 4, 2, 128, 128, 64, True, 0, 0.0, jnp.float32),
+    (1, 8, 1, 64, 256, 32, True, 0, 0.0, jnp.float32),
+    (2, 4, 4, 96, 96, 64, True, 32, 0.0, jnp.float32),
+    (1, 2, 1, 64, 64, 128, True, 0, 50.0, jnp.float32),
+    (1, 4, 2, 1, 192, 64, True, 0, 0.0, jnp.float32),    # decode shape
+    (2, 4, 2, 64, 64, 64, False, 0, 0.0, jnp.float32),   # bidirectional
+    (1, 4, 2, 128, 128, 64, True, 0, 0.0, jnp.bfloat16), # dtype sweep
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_attention_impls_agree(case):
+    B, Hq, Hkv, Sq, Skv, D, causal, window, softcap, dt = case
+    r = np.random.default_rng(B * Sq + Skv)
+    q = jnp.asarray(r.standard_normal((B, Hq, Sq, D)), dt)
+    k = jnp.asarray(r.standard_normal((B, Hkv, Skv, D)), dt)
+    v = jnp.asarray(r.standard_normal((B, Hkv, Skv, D)), dt)
+    kw = dict(causal=causal, window=window, softcap=softcap)
+    tol = 1e-5 if dt == jnp.float32 else 3e-2
+    ref = attention(q, k, v, impl="ref", **kw).astype(jnp.float32)
+    for impl in ("blocked", "blocked_ad", "interpret"):
+        out = attention(q, k, v, impl=impl, bq=32, bk=64, **kw).astype(jnp.float32)
+        err = float(jnp.abs(ref - out).max())
+        assert err < tol, (impl, err)
+
+
+def test_attention_mef_grads_match_autodiff():
+    r = np.random.default_rng(0)
+    q = jnp.asarray(r.standard_normal((1, 4, 64, 32)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 2, 64, 32)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, 2, 64, 32)), jnp.float32)
+
+    def loss(impl):
+        return lambda q, k, v: (
+            attention(q, k, v, impl=impl, bq=16, bk=16, window=16) ** 2
+        ).sum()
+
+    g1 = jax.grad(loss("blocked"), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss("blocked_ad"), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# segment_mm sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,e,d", [(100, 500, 32), (600, 2500, 64),
+                                   (50, 2000, 128), (257, 513, 16)])
+def test_segment_mm_matches_ref(n, e, d):
+    r = np.random.default_rng(n + d)
+    src = r.integers(0, n, e).astype(np.int32)
+    dst = r.integers(0, n, e).astype(np.int32)
+    coeff = r.standard_normal(e).astype(np.float32)
+    x = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
+    ref = segment_mm(x, jnp.asarray(src), jnp.asarray(dst),
+                     jnp.asarray(coeff), n, impl="ref")
+    pal = segment_mm(x, src, dst, coeff, n, impl="interpret")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# CIN sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,m,D,H,H2", [
+    (4, 13, 16, 24, 20), (8, 39, 10, 200, 100), (2, 6, 128, 12, 8),
+])
+def test_cin_matches_ref(B, m, D, H, H2):
+    r = np.random.default_rng(B + H)
+    x0 = jnp.asarray(r.standard_normal((B, m, D)).astype(np.float32))
+    xk = jnp.asarray(r.standard_normal((B, H, D)).astype(np.float32))
+    w = jnp.asarray(r.standard_normal((H2, H, m)).astype(np.float32))
+    ref = cin_layer(x0, xk, w, impl="ref")
+    pal = cin_layer(x0, xk, w, impl="interpret")
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal),
+                               rtol=2e-4, atol=2e-4)

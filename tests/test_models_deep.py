@@ -1,0 +1,158 @@
+"""Deeper model tests: Wigner-D exactness, eSCN equivariance, MoE paths
+(GSPMD vs explicit-a2a vs virtual experts), mef-attention gradients."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.wigner import edge_rotation, rotate_irreps, wigner_d_stack
+
+
+def _rand_rot(n, seed=0):
+    r = np.random.default_rng(seed)
+    a = r.standard_normal((n, 3, 3))
+    q, _ = np.linalg.qr(a)
+    det = np.linalg.det(q)
+    q[:, :, 0] *= det[:, None]
+    return jnp.asarray(q, jnp.float32)
+
+
+def test_wigner_orthogonal_and_homomorphic():
+    R1, R2 = _rand_rot(4, 1), _rand_rot(4, 2)
+    b1, b2 = wigner_d_stack(R1, 6), wigner_d_stack(R2, 6)
+    b12 = wigner_d_stack(R1 @ R2, 6)
+    for l in range(7):
+        eye = jnp.eye(2 * l + 1)
+        assert float(jnp.abs(
+            jnp.einsum("eij,ekj->eik", b1[l], b1[l]) - eye).max()) < 1e-4
+        assert float(jnp.abs(
+            b12[l] - jnp.einsum("eij,ejk->eik", b1[l], b2[l])).max()) < 1e-3
+
+
+def test_edge_rotation_aligns_to_z():
+    r = np.random.default_rng(3)
+    v = jnp.asarray(r.standard_normal((32, 3)), jnp.float32)
+    R = edge_rotation(v)
+    z = jnp.einsum("eij,ej->ei", R, v / jnp.linalg.norm(v, axis=-1, keepdims=True))
+    assert float(jnp.abs(z - jnp.array([0.0, 0.0, 1.0])).max()) < 1e-5
+
+
+def test_rotate_irreps_roundtrip():
+    r = np.random.default_rng(4)
+    R = _rand_rot(8, 5)
+    blocks = wigner_d_stack(R, 4)
+    feat = jnp.asarray(r.standard_normal((8, 25, 3)), jnp.float32)
+    back = rotate_irreps(rotate_irreps(feat, blocks), blocks, transpose=True)
+    assert float(jnp.abs(back - feat).max()) < 1e-4
+
+
+def test_equiformer_invariance_under_rotation():
+    from repro.config.base import GNNConfig
+    from repro.models import gnn as G
+    r = np.random.default_rng(0)
+    n, E, F = 40, 160, 12
+    graph = {
+        "x": jnp.asarray(r.standard_normal((n, F)), jnp.float32),
+        "src": jnp.asarray(r.integers(0, n, E), jnp.int32),
+        "dst": jnp.asarray(r.integers(0, n, E), jnp.int32),
+        "pos": jnp.asarray(r.standard_normal((n, 3)), jnp.float32),
+    }
+    cfg = GNNConfig(kind="equiformer_v2", d_out=5, n_layers=2, d_hidden=16,
+                    l_max=3, m_max=2, n_heads=4)
+    p = G.init_gnn(cfg, F, jax.random.PRNGKey(0))
+    out1 = G.gnn_forward(p, graph, cfg)
+    th = 1.1
+    Rz = jnp.asarray([[np.cos(th), -np.sin(th), 0],
+                      [np.sin(th), np.cos(th), 0], [0, 0, 1]], jnp.float32)
+    g2 = dict(graph, pos=graph["pos"] @ Rz.T)
+    out2 = G.gnn_forward(p, g2, cfg)
+    rel = float(jnp.abs(out1 - out2).max() / (jnp.abs(out1).max() + 1e-9))
+    assert rel < 1e-3, rel
+
+
+# ---------------------------------------------------------------------------
+# MoE a2a vs GSPMD (multi-device subprocess, as in test_distributed)
+# ---------------------------------------------------------------------------
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_moe_a2a_matches_gspmd():
+    out = _run("""
+    import jax, jax.numpy as jnp
+    import repro.models.transformer as T
+    from repro.config.base import MoEConfig
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    cfg = MoEConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+                    vocab_size=128, n_experts=4, top_k=2, capacity_factor=8.0,
+                    moe_groups=2, dtype="float32")
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(0), (4, 16), 0, 128)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    with mesh:
+        T.MOE_A2A = None
+        ref, _ = jax.jit(lambda p, t: T.forward(p, t, cfg))(p, toks)
+        g1 = jax.jit(jax.grad(lambda p: T.lm_loss(p, batch, cfg)))(p)
+        T.MOE_A2A = (mesh, 8.0)
+        a2a, _ = jax.jit(lambda p, t: T.forward(p, t, cfg))(p, toks)
+        g2 = jax.jit(jax.grad(lambda p: T.lm_loss(p, batch, cfg)))(p)
+    T.MOE_A2A = None
+    assert float(jnp.abs(ref - a2a).max()) < 1e-4
+    worst = max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), g1, g2)))
+    assert worst < 1e-3, worst
+    print("A2A OK")
+    """)
+    assert "A2A OK" in out
+
+
+def test_moe_a2a_virtual_experts():
+    out = _run("""
+    import jax, jax.numpy as jnp
+    import repro.models.transformer as T
+    from repro.config.base import MoEConfig
+    mesh = jax.make_mesh((1, 4), ("data", "model"))
+    cfg = MoEConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                    vocab_size=64, n_experts=2, top_k=1, capacity_factor=8.0,
+                    moe_groups=1, dtype="float32")
+    p = T.init_params(cfg, jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    with mesh:
+        T.MOE_A2A = None
+        ref, _ = jax.jit(lambda p, t: T.forward(p, t, cfg))(p, toks)
+        T.MOE_A2A = (mesh, 8.0)
+        a2a, _ = jax.jit(lambda p, t: T.forward(p, t, cfg))(p, toks)
+    T.MOE_A2A = None
+    assert float(jnp.abs(ref - a2a).max()) < 1e-4
+    print("VIRT OK")
+    """)
+    assert "VIRT OK" in out
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.0 and uniform routing, drop fraction stays small; gates of
+    dropped tokens must be exactly zeroed (output bounded)."""
+    from repro.config.base import MoEConfig
+    from repro.models import transformer as T
+    cfg = MoEConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                    vocab_size=64, n_experts=4, top_k=2, capacity_factor=1.0,
+                    dtype="float32")
+    p = T.init_params(cfg, jax.random.PRNGKey(2))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (4, 64), 0, 64)
+    logits, _ = T.forward(p, toks, cfg)
+    assert not bool(jnp.isnan(logits).any())
