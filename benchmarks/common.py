@@ -51,6 +51,15 @@ def benchmark_graphs(scale: float = 1.0) -> Dict[str, EdgeList]:
     }
 
 
+def engine_config(backend: str = "single", **kw) -> "GraphEngineConfig":
+    """GraphEngineConfig for benches: backend selectable via REPRO_BACKEND
+    (single | sharded | pallas) without editing every table module."""
+    from repro.config.base import GraphEngineConfig
+
+    backend = os.environ.get("REPRO_BACKEND", backend)
+    return GraphEngineConfig(backend=backend, **kw)
+
+
 def emit(table: str, rows: List[dict]) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{table}.json")

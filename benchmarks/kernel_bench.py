@@ -1,9 +1,16 @@
 """Kernel micro-benchmarks: ref (3-pass segment-min cascade) vs the fused
 one-pass kernel semantics. On CPU the Pallas interpreter is not a timing
 proxy, so we time the REF paths (what actually executes offline) and report
-the kernel's HBM-pass ratio as the derived metric the TPU would see."""
+the kernel's HBM-pass ratio as the derived metric the TPU would see.
+
+Also benches the decomposition ENGINE's sync/transfer profile: device
+supersteps (the paper's MR-round analogue) vs host synchronizations and
+plane packs, comparing the seed's chatty host loop model against the
+device-resident engine (results -> BENCH_engine.json)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -51,7 +58,53 @@ def run():
             "derived_hbm_pass_ratio": ratio,
         })
     emit("kernel_bench", rows)
+    run_engine_sync_bench()
     return rows
+
+
+BENCH_ENGINE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_engine.json")
+
+
+def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
+                          out_path: str = BENCH_ENGINE):
+    """Supersteps vs host-syncs: seed's chatty loop model vs the engine.
+
+    Seed cost model (per CLUSTER call): one uncovered-counter sync per
+    stage + two scalar syncs (steps, reached) per grow call, and — on the
+    distributed path — one full plane pack/pad + device_put per grow call.
+    Device-resident engine: one sync per stage, one pack total. Asserts the
+    acceptance criteria: pack <= 1 per cluster() call, syncs == stages.
+    """
+    from repro.core import cluster
+    from repro.graph import random_geometric
+
+    g = random_geometric(n, avg_degree=3.0, seed=1)
+    t0 = time.perf_counter()
+    dec = cluster(g, tau, seed=3)
+    dt = time.perf_counter() - t0
+    m = dec.metrics
+    assert m.state_transfers <= 1, f"plane pack ran {m.state_transfers}x"
+    assert m.host_syncs == m.stages, (m.host_syncs, m.stages)
+
+    old_syncs = m.stages + 2 * m.grow_calls   # chatty-loop model (see above)
+    old_packs = m.grow_calls                  # distributed seed packed per grow
+    row = {
+        "graph": f"road-like-n{n}",
+        "supersteps": m.growing_steps,        # MR-round analogue (device)
+        "stages": m.stages,
+        "grow_calls": m.grow_calls,
+        "host_syncs_engine": m.host_syncs,
+        "host_syncs_chatty_loop": old_syncs,
+        "plane_packs_engine": m.state_transfers,
+        "plane_packs_chatty_loop": old_packs,
+        "sync_reduction": round(old_syncs / max(m.host_syncs, 1), 2),
+        "seconds": round(dt, 2),
+    }
+    with open(out_path, "w") as f:
+        json.dump(row, f, indent=1)
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    return row
 
 
 if __name__ == "__main__":

@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import benchmark_graphs, emit, true_diameter
-from repro.config.base import GraphEngineConfig
+from benchmarks.common import benchmark_graphs, emit, engine_config, true_diameter
 from repro.core import approximate_diameter
 
 
@@ -19,7 +18,7 @@ def run(scale: float = 1.0):
     for name, g in benchmark_graphs(scale).items():
         phi = true_diameter(g)
         for variant in ("complete", "stop"):
-            cfg = GraphEngineConfig(variant=variant, tau_fraction=2e-2)
+            cfg = engine_config(variant=variant, tau_fraction=2e-2)
             t0 = time.perf_counter()
             est = approximate_diameter(g, cfg)
             dt = time.perf_counter() - t0

@@ -11,8 +11,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import benchmark_graphs, emit, true_diameter
-from repro.config.base import GraphEngineConfig
+from benchmarks.common import benchmark_graphs, emit, engine_config, true_diameter
 from repro.core import approximate_diameter, diameter_2approx_sssp
 
 
@@ -22,7 +21,7 @@ def run(scale: float = 1.0):
         phi = true_diameter(g)
 
         t0 = time.perf_counter()
-        est = approximate_diameter(g, GraphEngineConfig(tau_fraction=2e-2))
+        est = approximate_diameter(g, engine_config(tau_fraction=2e-2))
         t_cluster = time.perf_counter() - t0
 
         t0 = time.perf_counter()

@@ -1,7 +1,11 @@
 """End-to-end driver for the paper's experiments: CLUSTER vs SSSP-BF on all
 three benchmark graph families, with the stop/complete variants.
 
-  PYTHONPATH=src python examples/diameter_pipeline.py [--scale 0.5]
+  PYTHONPATH=src python examples/diameter_pipeline.py [--scale 0.5] \
+      [--backend single|sharded|pallas]
+
+Every backend produces the same decomposition for a fixed seed (see
+docs/engine.md), so the estimate column is backend-independent.
 """
 import argparse
 import time
@@ -12,6 +16,8 @@ from repro.graph import grid_mesh, random_geometric, social_like
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=float, default=0.5)
+ap.add_argument("--backend", default="single",
+                choices=["single", "sharded", "pallas"])
 args = ap.parse_args()
 
 graphs = {
@@ -24,7 +30,8 @@ print(f"{'graph':14s} {'algo':10s} {'estimate':>12s} {'rounds':>7s} {'sec':>6s}"
 for name, g in graphs.items():
     for variant in ("stop", "complete"):
         t0 = time.time()
-        est = approximate_diameter(g, GraphEngineConfig(variant=variant))
+        est = approximate_diameter(
+            g, GraphEngineConfig(variant=variant, backend=args.backend))
         print(f"{name:14s} CL-{variant:8s} {est.phi_approx:12d} "
               f"{est.growing_steps:7d} {time.time()-t0:6.1f}")
     t0 = time.time()

@@ -1,4 +1,5 @@
-"""Shared low-level utilities: dtypes, padding, timing, logging."""
+"""Shared low-level utilities: dtypes, padding, timing, logging, jax shims."""
+from repro.common.compat import shard_map
 from repro.common.util import (
     ceil_div,
     pad_to_multiple,
@@ -11,6 +12,7 @@ from repro.common.util import (
 )
 
 __all__ = [
+    "shard_map",
     "ceil_div",
     "pad_to_multiple",
     "pad_axis_to",

@@ -1,0 +1,48 @@
+"""Version shims for jax APIs that moved between releases.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` (where the
+replication-check kwarg is ``check_rep``) to a top-level export (where it is
+``check_vma``). Likewise Pallas renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams``. The installed toolchain pins jax 0.4.x, which only
+ships the old spellings — route the calls in this repo through these shims so
+the code runs on both.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    """``jax.shard_map`` on new jax; experimental fallback on jax 0.4.x.
+
+    ``check_vma`` maps onto the old API's ``check_rep`` (same meaning:
+    validate that outputs are replicated where the out_specs claim so).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def tpu_compiler_params(**kwargs) -> Any:
+    """``pltpu.CompilerParams`` on new jax, ``TPUCompilerParams`` on 0.4.x."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -208,6 +208,9 @@ class GraphEngineConfig(ArchConfig):
     max_steps_per_phase: int = 0     # 0 -> 2n/tau (paper's num_it)
     use_cluster2: bool = False       # paper optimization (1): default CLUSTER
     seed: int = 0
+    backend: str = "single"          # single | sharded | pallas (core/backend.py)
+    comm: str = "allgather"          # sharded backend collective: allgather | halo
+    relax_impl: str = "auto"         # pallas backend kernel impl: auto | ref | pallas
 
 
 @dataclass(frozen=True)

@@ -1,6 +1,14 @@
 """The paper's contribution: weighted graph decomposition + diameter approx."""
-from repro.core.state import EngineState, init_state, INF
+from repro.core.state import EngineState, init_state, pad_state, relay_planes, INF
 from repro.core.delta_growing import growing_step, partial_growth, edge_candidates
+from repro.core.backend import (
+    RelaxBackend,
+    SingleDeviceBackend,
+    ShardedBackend,
+    PallasBackend,
+    make_backend,
+)
+from repro.core.engine import EngineMetrics, run_cluster, run_cluster2
 from repro.core.cluster import cluster, cluster2, Decomposition
 from repro.core.quotient import build_quotient, quotient_diameter, QuotientGraph
 from repro.core.diameter import approximate_diameter, DiameterEstimate, tau_for
@@ -14,7 +22,17 @@ from repro.core.sssp import (
 __all__ = [
     "EngineState",
     "init_state",
+    "pad_state",
+    "relay_planes",
     "INF",
+    "RelaxBackend",
+    "SingleDeviceBackend",
+    "ShardedBackend",
+    "PallasBackend",
+    "make_backend",
+    "EngineMetrics",
+    "run_cluster",
+    "run_cluster2",
     "growing_step",
     "partial_growth",
     "edge_candidates",

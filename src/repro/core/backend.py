@@ -1,0 +1,302 @@
+"""RelaxBackend: one Δ-growing engine, three interchangeable executions.
+
+The decomposition engine (``core/engine.py``) operates on the canonical
+plane-based state (``EngineState``, padded once per decomposition by
+``state.pad_state``) and delegates every grow call to a backend:
+
+  * ``SingleDeviceBackend`` — flat edge arrays + the jitted
+    ``partial_growth`` while_loop (today's laptop path);
+  * ``ShardedBackend`` — wraps ``DistributedEngine`` (allgather or halo
+    shard_map supersteps on a device mesh);
+  * ``PallasBackend`` — routes the local relax through the fused
+    ``kernels/edge_relax`` kernel (Pallas on TPU, jnp oracle elsewhere).
+
+All three share the same per-edge candidate rule
+(``kernels/edge_relax/ref.edge_relax_candidates``) and the same
+lexicographic (d, c, pathw) tuple-min, so for a fixed seed they produce
+byte-identical decompositions. ``grow`` is traceable: the engine calls it
+from inside one jitted per-stage program, so a stage costs a single host
+synchronization regardless of how many supersteps or Δ-doublings it runs.
+
+``transfers`` counts host->device state placements (the pack/pad the seed
+engine paid on every grow call); the engine bench asserts it is at most one
+per ``cluster()`` call.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta_growing import GrowthStats, growth_loop, partial_growth
+from repro.core.state import EngineState, init_state, pad_state, relay_planes
+from repro.graph.structures import EdgeList
+
+
+@runtime_checkable
+class RelaxBackend(Protocol):
+    """What the decomposition engine needs from an execution backend."""
+
+    kind: str          # "single" | "sharded" | "pallas"
+    n_nodes: int       # real node count
+    n_pad: int         # padded plane length (backend-specific layout)
+    transfers: int     # host->device state placements (pack/pad events)
+
+    def init_state(self) -> EngineState:
+        """Padded, device-resident initial planes. Called once per
+        decomposition — the ONLY place planes are packed/padded."""
+        ...
+
+    def grow(
+        self,
+        state: EngineState,
+        delta: jnp.ndarray,
+        half_target: jnp.ndarray,
+        num_it: jnp.ndarray,
+        variant: str,
+    ) -> Tuple[EngineState, GrowthStats]:
+        """One PartialGrowth call on the padded planes. Must be traceable
+        (the engine invokes it inside its jitted stage program)."""
+        ...
+
+    def grow_spec(self) -> "GrowSpec":
+        """Hashable-by-value jit cache key for the engine's stage program."""
+        ...
+
+    def graph_args(self) -> Tuple[jnp.ndarray, ...]:
+        """Device edge arrays, passed as TRACED operands through the stage
+        jit — so re-clustering the same-shaped graph (even via a fresh
+        backend instance) hits the compile cache instead of retracing."""
+        ...
+
+
+class GrowSpec(tuple):
+    """(kind, *static_meta) — the static half of a backend's grow call.
+
+    Value-hashable for the single/pallas kinds, so distinct backend
+    instances over same-shaped graphs share one compiled stage program. The
+    sharded kind embeds its (long-lived) backend instance, which keys by
+    identity — reusing a DistributedEngine reuses its compilation.
+    """
+
+    def __new__(cls, *items):
+        return super().__new__(cls, items)
+
+
+def dispatch_grow(spec: GrowSpec, graph_args, state, delta, half_target,
+                  num_it, variant: str):
+    """Route a grow call from (static spec, traced graph arrays)."""
+    kind = spec[0]
+    if kind == "single":
+        (n_pad,) = spec[1:]
+        src, dst, weight = graph_args
+        return partial_growth(state, src, dst, weight,
+                              jnp.int32(delta), jnp.int32(half_target),
+                              jnp.int32(num_it), n_pad, variant=variant)
+    if kind == "pallas":
+        n_tiles, node_tile, edge_block, impl = spec[1:]
+        bsrc, bdst, bw, bmask, btile = graph_args
+        return _pallas_growth(state, bsrc, bdst, bw, bmask, btile,
+                              jnp.int32(delta), jnp.int32(half_target),
+                              jnp.int32(num_it), n_tiles, node_tile,
+                              edge_block, impl, variant)
+    if kind == "sharded":
+        (backend,) = spec[1:]
+        return backend.grow(state, delta, half_target, num_it, variant)
+    raise ValueError(f"unknown grow spec kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# single device
+# ---------------------------------------------------------------------------
+
+
+class SingleDeviceBackend:
+    """Flat destination-indexed edge arrays + jitted while_loop growth."""
+
+    kind = "single"
+
+    def __init__(self, edges: EdgeList):
+        self.n_nodes = edges.n_nodes
+        self.n_pad = edges.n_nodes
+        self.src = jnp.asarray(edges.src)
+        self.dst = jnp.asarray(edges.dst)
+        self.weight = jnp.asarray(edges.weight)
+        self.transfers = 0
+
+    def init_state(self) -> EngineState:
+        self.transfers += 1
+        return init_state(self.n_pad)
+
+    def grow_spec(self) -> GrowSpec:
+        return GrowSpec("single", self.n_pad)
+
+    def graph_args(self):
+        return (self.src, self.dst, self.weight)
+
+    def grow(self, state, delta, half_target, num_it, variant):
+        return partial_growth(
+            state, self.src, self.dst, self.weight,
+            jnp.int32(delta), jnp.int32(half_target), jnp.int32(num_it),
+            self.n_pad, variant=variant,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=(
+    "n_tiles", "node_tile", "edge_block", "impl", "variant"))
+def _pallas_growth(
+    state: EngineState,
+    bsrc, bdst, bw, bmask, block_tile,
+    delta, half_target, num_it,
+    n_tiles: int, node_tile: int, edge_block: int, impl: str,
+    variant: str,
+):
+    """PartialGrowth where each superstep is one fused edge_relax pass."""
+    from repro.kernels.edge_relax.ops import edge_relax
+
+    rw0, rc, rp, frozen = relay_planes(state)
+
+    def relax_step(s):
+        return edge_relax(
+            (s.d, s.c, s.pathw, rw0, rc, rp),
+            bsrc, bdst, bw, bmask, block_tile, delta,
+            n_tiles, node_tile=node_tile, edge_block=edge_block, impl=impl,
+        )
+
+    return growth_loop(state, relax_step, frozen, delta, half_target, num_it,
+                       variant)
+
+
+class PallasBackend:
+    """Blocked dst-sorted edge layout + fused one-pass relax kernel."""
+
+    kind = "pallas"
+
+    def __init__(self, edges: EdgeList, impl: str = "auto",
+                 node_tile: Optional[int] = None,
+                 edge_block: Optional[int] = None):
+        from repro.kernels.edge_relax.kernel import EDGE_BLOCK, NODE_TILE
+        from repro.kernels.edge_relax.ops import block_edges_host
+
+        self.node_tile = node_tile or NODE_TILE
+        self.edge_block = edge_block or EDGE_BLOCK
+        if impl == "auto":
+            impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+        self.impl = impl
+        blk = block_edges_host(edges.src, edges.dst, edges.weight,
+                               edges.n_nodes, self.node_tile, self.edge_block)
+        self.n_nodes = edges.n_nodes
+        self.n_pad = blk["n_pad_nodes"]
+        self.n_tiles = blk["n_tiles"]
+        self._bsrc = jnp.asarray(blk["src"])
+        self._bdst = jnp.asarray(blk["dst"])
+        self._bw = jnp.asarray(blk["w"])
+        self._bmask = jnp.asarray(blk["mask"])
+        self._btile = jnp.asarray(blk["block_tile"])
+        self.transfers = 0
+
+    def init_state(self) -> EngineState:
+        self.transfers += 1
+        return pad_state(init_state(self.n_nodes), self.n_pad)
+
+    def grow_spec(self) -> GrowSpec:
+        return GrowSpec("pallas", self.n_tiles, self.node_tile,
+                        self.edge_block, self.impl)
+
+    def graph_args(self):
+        return (self._bsrc, self._bdst, self._bw, self._bmask, self._btile)
+
+    def grow(self, state, delta, half_target, num_it, variant):
+        return _pallas_growth(
+            state, self._bsrc, self._bdst, self._bw, self._bmask, self._btile,
+            jnp.int32(delta), jnp.int32(half_target), jnp.int32(num_it),
+            self.n_tiles, self.node_tile, self.edge_block, self.impl,
+            variant,
+        )
+
+
+# ---------------------------------------------------------------------------
+# sharded (allgather / halo)
+# ---------------------------------------------------------------------------
+
+
+class ShardedBackend:
+    """Wraps ``DistributedEngine``: shard_map supersteps on a device mesh.
+
+    The canonical planes live sharded on the mesh; each grow call derives the
+    relay planes (elementwise, on device) and runs the engine's jitted
+    superstep while_loop. No per-grow pack or host round-trip.
+    """
+
+    kind = "sharded"
+
+    def __init__(self, engine):
+        self.eng = engine
+        self.n_nodes = engine.graph.n_nodes
+        self.n_pad = engine.graph.n_pad
+        self.transfers = 0
+
+    def init_state(self) -> EngineState:
+        self.transfers += 1
+        st = pad_state(init_state(self.n_nodes), self.n_pad)
+        ns = self.eng.node_sharding()
+        return EngineState(*(jax.device_put(x, ns) for x in st))
+
+    def grow_spec(self) -> GrowSpec:
+        # identity-keyed: the mesh/shard_map closures live on the (long-
+        # lived) DistributedEngine, so reuse of the engine reuses the
+        # compiled stage program.
+        return GrowSpec("sharded", self)
+
+    def graph_args(self):
+        return ()
+
+    def grow(self, state, delta, half_target, num_it, variant):
+        rw0, rc, rp, frozen = relay_planes(state)
+        planes = (state.d, state.c, state.pathw, rw0, rc, rp, frozen)
+        planes, k, reached, changed = self.eng._growth(
+            planes, self.eng.gparts, jnp.int32(delta),
+            jnp.int32(half_target), jnp.int32(num_it), variant=variant,
+        )
+        state = state._replace(d=planes[0], c=planes[1], pathw=planes[2])
+        return state, GrowthStats(steps=k, reached=reached,
+                                  changed_last=changed)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+
+def make_backend(
+    edges: EdgeList,
+    spec="single",
+    *,
+    mesh=None,
+    comm: str = "allgather",
+    impl: str = "auto",
+) -> RelaxBackend:
+    """Resolve a backend from a config spec (or pass one through)."""
+    if not isinstance(spec, str):
+        return spec  # already a RelaxBackend
+    if spec in ("", "single"):
+        return SingleDeviceBackend(edges)
+    if spec == "pallas":
+        return PallasBackend(edges, impl=impl)
+    if spec == "sharded":
+        from repro.core.distributed import DistributedEngine
+
+        if mesh is None:
+            from repro.launch.mesh import host_device_mesh
+
+            mesh = host_device_mesh()
+        return ShardedBackend(DistributedEngine(edges, mesh, comm=comm))
+    raise ValueError(f"unknown backend {spec!r} "
+                     "(expected single | sharded | pallas)")

@@ -1,61 +1,35 @@
-"""CLUSTER(G, tau) — paper Algorithm 1, host-driven stage loop.
+"""CLUSTER(G, tau) — paper Algorithm 1 — as thin wrappers over the
+device-resident engine (``core/engine.py``) and a ``RelaxBackend``
+(``core/backend.py``).
 
-Stages sample O(tau log n) new centers from the uncovered nodes, grow all
-clusters with Delta-growing steps (jitted ``partial_growth`` while_loop),
-double Delta until at least half the stage's uncovered nodes are reached
-(continuing the partial clustering across doublings — paper Section 5
-optimization (2)), then freeze coverage. Remaining nodes become singletons.
+Stages sample O(tau log n) new centers from the uncovered nodes (jax.random,
+on device), grow all clusters with Delta-growing steps, double Delta until at
+least half the stage's uncovered nodes are reached (continuing the partial
+clustering across doublings — paper Section 5 optimization (2)), then freeze
+coverage. Remaining nodes become singletons. Each stage is one jitted device
+program costing one host sync; see ``docs/engine.md``.
 
 The returned radius is max over nodes of the realized path weight from the
 assigned center — an exact upper bound on the clustering radius in G.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Optional, Union
 
 from repro.common import get_logger
-from repro.core.delta_growing import partial_growth
-from repro.core.state import (
-    EngineState,
-    INF,
-    cover,
-    finalize_singletons,
-    init_state,
-    promote_centers,
-    reset_in_stage,
-    uncovered_count,
-)
+from repro.core.backend import RelaxBackend, make_backend
+from repro.core.engine import Decomposition, EngineMetrics, run_cluster, run_cluster2
 from repro.graph.structures import EdgeList
 
 log = get_logger("repro.cluster")
 
-
-@dataclass
-class Decomposition:
-    """Output of CLUSTER / CLUSTER2."""
-
-    n_nodes: int
-    final_c: np.ndarray        # int32 [n] cluster center id per node
-    final_pathw: np.ndarray    # int32 [n] dist-from-center upper bound
-    radius: int                # R_CL(tau) = max final_pathw
-    delta_end: int
-    n_clusters: int
-    n_stages: int
-    growing_steps: int         # total Delta-growing steps (the paper's
-                               # round-complexity proxy)
-
-    def cluster_sizes(self) -> np.ndarray:
-        _, counts = np.unique(self.final_c, return_counts=True)
-        return counts
+__all__ = ["Decomposition", "EngineMetrics", "cluster", "cluster2",
+           "_initial_delta"]
 
 
 def _initial_delta(edges: EdgeList, mode: str) -> int:
+    if edges.n_edges == 0:
+        return 1  # nothing to grow along; any positive budget works
     if mode == "min":
         # paper pseudocode: 1 + min edge weight
         return int(edges.weight.min()) + 1
@@ -63,6 +37,20 @@ def _initial_delta(edges: EdgeList, mode: str) -> int:
         # paper Section 5: average edge weight is a good initial guess
         return max(int(edges.weight.mean()), 1)
     return max(int(mode), 1)
+
+
+def _resolve_backend(edges: EdgeList, backend, relax_fn) -> RelaxBackend:
+    """``relax_fn`` is the legacy hook name — it now takes a RelaxBackend
+    (``DistributedEngine.make_relax_fn()`` returns one). ``backend`` accepts
+    a spec string ("single" | "sharded" | "pallas") or a backend instance."""
+    if relax_fn is not None:
+        if isinstance(relax_fn, RelaxBackend):
+            return relax_fn
+        raise TypeError(
+            "cluster(relax_fn=...) now expects a RelaxBackend (e.g. "
+            "DistributedEngine.make_relax_fn() or core.backend.make_backend); "
+            f"got {type(relax_fn).__name__}")
+    return make_backend(edges, backend)
 
 
 def cluster(
@@ -76,85 +64,21 @@ def cluster(
     max_steps_per_phase: int = 0,
     threshold_const: float = 8.0,
     relax_fn=None,
+    backend: Union[str, RelaxBackend] = "single",
 ) -> Decomposition:
     """Paper Algorithm 1. ``variant`` in {"stop", "complete"} (Table 2).
 
-    ``relax_fn``: optional override of the jitted growth loop — the
-    distributed engine passes its shard_map variant here.
+    ``backend`` selects the execution engine (see ``core/backend.py``); all
+    backends produce byte-identical decompositions for a fixed seed.
     """
-    n = edges.n_nodes
-    logn = max(math.log(max(n, 2)), 1.0)
-    threshold = max(int(threshold_const * tau * logn), 1)
-    num_it = jnp.int32(max_steps_per_phase or max(2 * n // max(tau, 1), 8))
-
-    src = jnp.asarray(edges.src)
-    dst = jnp.asarray(edges.dst)
-    w = jnp.asarray(edges.weight)
-
-    grow = relax_fn or (
-        lambda st, delta, half, var: partial_growth(
-            st, src, dst, w, jnp.int32(delta), jnp.int32(half), num_it, n, variant=var
-        )
-    )
-
-    rng = np.random.default_rng(seed)
-    state = init_state(n)
-    delta = _initial_delta(edges, delta_init)
-    max_delta = int(min(np.int64(edges.weight.astype(np.int64).sum()) + 1, 2**30))
-    total_steps = 0
-    stage = 0
-
-    while stage < max_stages:
-        u_count = int(uncovered_count(state))
-        if u_count < threshold:
-            break
-        p = min(1.0, gamma * tau * logn / u_count)
-        coin = rng.random(n) < p
-        eligible = np.asarray((~state.covered) & (~state.is_center))
-        new_centers = jnp.asarray(coin & eligible)
-        n_new = int(new_centers.sum())
-        if n_new == 0:  # resample cheaply rather than wasting a stage
-            continue
-        state = promote_centers(state, new_centers)
-        state = reset_in_stage(state)
-
-        # goal: half of the stage's uncovered set, counting the nodes that
-        # just became centers (paper counts them inside V').
-        half_target = max((u_count + 1) // 2 - n_new, 0)
-
-        doublings = 0
-        while True:
-            state, stats = grow(state, delta, half_target, variant)
-            total_steps += int(stats.steps)
-            if int(stats.reached) >= half_target:
-                break
-            if delta >= max_delta:
-                log.warning("delta saturated at %d; covering what we reached", delta)
-                break
-            delta = min(delta * 2, max_delta)
-            doublings += 1
-
-        state = cover(state, jnp.int32(delta))
-        stage += 1
-        log.info(
-            "stage %d: centers+%d delta=%d steps=%d uncovered %d -> %d",
-            stage, n_new, delta, int(stats.steps), u_count, int(uncovered_count(state)),
-        )
-
-    state = finalize_singletons(state)
-
-    final_c = np.asarray(state.final_c)
-    final_pathw = np.asarray(state.final_pathw)
-    assert (final_pathw < np.int32(INF)).all(), "uncovered node escaped finalization"
-    return Decomposition(
-        n_nodes=n,
-        final_c=final_c,
-        final_pathw=final_pathw,
-        radius=int(final_pathw.max()) if n else 0,
-        delta_end=delta,
-        n_clusters=int(len(np.unique(final_c))),
-        n_stages=stage,
-        growing_steps=total_steps,
+    be = _resolve_backend(edges, backend, relax_fn)
+    return run_cluster(
+        edges, be, tau,
+        gamma=gamma, variant=variant,
+        delta0=_initial_delta(edges, delta_init),
+        seed=seed, max_stages=max_stages,
+        max_steps_per_phase=max_steps_per_phase,
+        threshold_const=threshold_const,
     )
 
 
@@ -166,6 +90,7 @@ def cluster2(
     delta_init: str = "avg",
     base: Optional[Decomposition] = None,
     relax_fn=None,
+    backend: Union[str, RelaxBackend] = "single",
 ) -> Decomposition:
     """CLUSTER2(G, tau) — paper Algorithm 2.
 
@@ -174,56 +99,9 @@ def cluster2(
     probability doubling each stage (last stage selects everything left).
     Growth runs to quiescence each stage (PartialGrowth2).
     """
-    n = edges.n_nodes
+    be = _resolve_backend(edges, backend, relax_fn)
     if base is None:
-        base = cluster(edges, tau, gamma=gamma, seed=seed, delta_init=delta_init,
-                       relax_fn=relax_fn)
+        base = cluster(edges, tau, gamma=gamma, seed=seed,
+                       delta_init=delta_init, relax_fn=be)
     delta = max(2 * base.radius, 2)
-
-    src = jnp.asarray(edges.src)
-    dst = jnp.asarray(edges.dst)
-    w = jnp.asarray(edges.weight)
-    num_it = jnp.int32(4 * n)
-
-    grow = relax_fn or (
-        lambda st, dl, half, var: partial_growth(
-            st, src, dst, w, jnp.int32(dl), jnp.int32(half), num_it, n, variant=var
-        )
-    )
-
-    rng = np.random.default_rng(seed + 1)
-    state = init_state(n)
-    total_steps = 0
-    stages = int(math.ceil(math.log2(max(n, 2)))) + 1
-    stage_count = 0
-    for i in range(1, stages + 1):
-        u_count = int(uncovered_count(state))
-        if u_count == 0:
-            break
-        p = 1.0 if i == stages else min(1.0, (2.0**i) / n)
-        coin = rng.random(n) < p
-        eligible = np.asarray((~state.covered) & (~state.is_center))
-        new_centers = jnp.asarray(coin & eligible)
-        if int(new_centers.sum()) == 0:
-            continue
-        state = promote_centers(state, new_centers)
-        state = reset_in_stage(state)
-        # PartialGrowth2: run to quiescence under the fixed budget
-        state, stats = grow(state, delta, 0, "complete")
-        total_steps += int(stats.steps)
-        state = cover(state, jnp.int32(delta))
-        stage_count += 1
-
-    state = finalize_singletons(state)
-    final_c = np.asarray(state.final_c)
-    final_pathw = np.asarray(state.final_pathw)
-    return Decomposition(
-        n_nodes=n,
-        final_c=final_c,
-        final_pathw=final_pathw,
-        radius=int(final_pathw.max()) if n else 0,
-        delta_end=delta,
-        n_clusters=int(len(np.unique(final_c))),
-        n_stages=stage_count,
-        growing_steps=total_steps,
-    )
+    return run_cluster2(edges, be, tau, delta=delta, seed=seed + 1)

@@ -26,8 +26,9 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.state import INF, EngineState
+from repro.core.state import INF, EngineState, relay_planes
 from repro.graph.segment_ops import segment_min_triple
+from repro.kernels.edge_relax.ref import edge_relax_candidates
 
 
 class GrowthStats(NamedTuple):
@@ -42,22 +43,19 @@ def edge_candidates(
     weight: jnp.ndarray,
     delta: jnp.ndarray,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Per-edge (cand_d, cand_c, cand_pathw); INF where inadmissible."""
-    relay = state.covered[src]
-    # relay branch: contracted edge (final_c[src], v), rescaled + clamped >= 0
-    w_red = jnp.maximum(weight + state.offset[src], 0)
-    relay_ok = relay & (w_red < delta)
-    # live branch
-    d_src = state.d[src]
-    live_ok = (~relay) & (d_src < delta) & (weight < delta)
-    d_safe = jnp.where(live_ok, d_src, 0)
+    """Per-edge (cand_d, cand_c, cand_pathw); INF where inadmissible.
 
-    cand_d = jnp.where(relay_ok, w_red, jnp.where(live_ok, d_safe + weight, INF))
-    cand_c = jnp.where(relay_ok, state.final_c[src], jnp.where(live_ok, state.c[src], INF))
-    p_src = jnp.where(relay_ok, state.final_pathw[src], jnp.where(live_ok, state.pathw[src], 0))
-    p_safe = jnp.where(p_src >= INF - jnp.int32(2**30), jnp.int32(0), p_src)  # guard
-    cand_p = jnp.where(relay_ok | live_ok, p_safe + weight, INF)
-    return cand_d, cand_c, cand_p
+    Thin adapter: derives the relay planes from ``state`` and defers to the
+    ONE canonical candidate rule in ``kernels/edge_relax/ref.py`` (shared by
+    the single-device, sharded, and Pallas backends). Covered sources have
+    in-stage d = INF, so the live branch is self-masking for them.
+    """
+    rw0, rc, rp, _ = relay_planes(state)
+    return edge_relax_candidates(
+        state.d[src], state.c[src], state.pathw[src],
+        rw0[src], rc[src], rp[src],
+        weight, jnp.bool_(True), delta,
+    )
 
 
 def growing_step(
@@ -84,6 +82,50 @@ def growing_step(
     return new, jnp.any(upd)
 
 
+def growth_loop(
+    state: EngineState,
+    relax_step,
+    frozen: jnp.ndarray,
+    delta: jnp.ndarray,
+    half_target: jnp.ndarray,
+    num_it: jnp.ndarray,
+    variant: str,
+) -> Tuple[EngineState, GrowthStats]:
+    """THE PartialGrowth while_loop, shared by every backend.
+
+    ``relax_step(s) -> (d_min, c_min, p_min)`` is the backend's one-superstep
+    relax (jnp segment ops, Pallas kernel, ...); the stopping rule, update
+    mask, and stats live only here so the byte-identical-backends invariant
+    cannot drift.
+    """
+
+    def reached_count(s: EngineState) -> jnp.ndarray:
+        return jnp.sum((~frozen) & (s.d < delta))
+
+    def cond(carry):
+        s, k, changed = carry
+        more = changed & (k < num_it)
+        if variant == "stop":
+            more = more & (reached_count(s) < half_target)
+        return more
+
+    def body(carry):
+        s, k, _ = carry
+        d_min, c_min, p_min = relax_step(s)
+        upd = (~frozen) & (d_min < s.d)
+        s2 = s._replace(
+            d=jnp.where(upd, d_min, s.d),
+            c=jnp.where(upd, c_min, s.c),
+            pathw=jnp.where(upd, p_min, s.pathw),
+        )
+        return (s2, k + 1, jnp.any(upd))
+
+    init = (state, jnp.int32(0), jnp.bool_(True))
+    final, k, changed = jax.lax.while_loop(cond, body, init)
+    stats = GrowthStats(steps=k, reached=reached_count(final), changed_last=changed)
+    return final, stats
+
+
 @partial(jax.jit, static_argnames=("n_nodes", "variant"))
 def partial_growth(
     state: EngineState,
@@ -103,22 +145,16 @@ def partial_growth(
     quiescence (paper Table 2 compares both).
     """
 
-    def reached_count(s: EngineState) -> jnp.ndarray:
-        return jnp.sum((~s.covered) & (~s.is_center) & (s.d < delta))
+    # relay planes are a function of covered/final_*/offset only, which do
+    # not change within a grow call — derive them once, not per superstep.
+    rw0, rc, rp, frozen = relay_planes(state)
 
-    def cond(carry):
-        s, k, changed = carry
-        more = changed & (k < num_it)
-        if variant == "stop":
-            more = more & (reached_count(s) < half_target)
-        return more
+    def relax_step(s: EngineState):
+        cand_d, cand_c, cand_p = edge_relax_candidates(
+            s.d[src], s.c[src], s.pathw[src], rw0[src], rc[src], rp[src],
+            weight, jnp.bool_(True), delta,
+        )
+        return segment_min_triple(cand_d, cand_c, cand_p, dst, n_nodes)
 
-    def body(carry):
-        s, k, _ = carry
-        s2, ch = growing_step(s, src, dst, weight, delta, n_nodes)
-        return (s2, k + 1, ch)
-
-    init = (state, jnp.int32(0), jnp.bool_(True))
-    final, k, changed = jax.lax.while_loop(cond, body, init)
-    stats = GrowthStats(steps=k, reached=reached_count(final), changed_last=changed)
-    return final, stats
+    return growth_loop(state, relax_step, frozen, delta, half_target, num_it,
+                       variant)

@@ -13,6 +13,7 @@ from typing import Optional
 
 from repro.common import Timer, get_logger
 from repro.config.base import GraphEngineConfig
+from repro.core.backend import make_backend
 from repro.core.cluster import Decomposition, cluster, cluster2
 from repro.core.quotient import build_quotient, quotient_diameter
 from repro.graph.structures import EdgeList
@@ -31,6 +32,9 @@ class DiameterEstimate:
     delta_end: int
     seconds: float
     connected: bool
+    # phi_approx is a conservative estimate of the diameter ONLY when
+    # ``connected`` — for a disconnected graph it upper-bounds the largest
+    # finite-distance pair (the true diameter is infinite).
 
 
 def tau_for(n_nodes: int, fraction: float = 1e-3, minimum: int = 4) -> int:
@@ -47,13 +51,18 @@ def approximate_diameter(
     tau: Optional[int] = None,
     relax_fn=None,
 ) -> DiameterEstimate:
+    """Paper pipeline. ``relax_fn`` (a RelaxBackend) overrides the backend
+    selected by ``cfg.backend``; for a disconnected input the estimate covers
+    only finite-distance pairs and ``connected`` is False."""
     cfg = cfg or GraphEngineConfig()
     tau = tau or tau_for(edges.n_nodes, cfg.tau_fraction)
+    backend = relax_fn if relax_fn is not None else make_backend(
+        edges, cfg.backend, comm=cfg.comm, impl=cfg.relax_impl)
     with Timer() as t:
         if cfg.use_cluster2:
             dec: Decomposition = cluster2(
                 edges, tau, gamma=cfg.gamma, seed=cfg.seed,
-                delta_init=cfg.delta_init, relax_fn=relax_fn,
+                delta_init=cfg.delta_init, relax_fn=backend,
             )
         else:
             dec = cluster(
@@ -61,11 +70,15 @@ def approximate_diameter(
                 delta_init=cfg.delta_init, seed=cfg.seed,
                 max_stages=cfg.max_stages,
                 max_steps_per_phase=cfg.max_steps_per_phase,
-                relax_fn=relax_fn,
+                relax_fn=backend,
             )
         q = build_quotient(edges, dec)
         phi_q, connected = quotient_diameter(q)
         phi = phi_q + 2 * dec.radius
+        if not connected:
+            log.warning(
+                "graph is disconnected: phi_approx=%d only bounds "
+                "finite-distance pairs", phi)
     log.info(
         "phi_approx=%d (quotient=%d radius=%d clusters=%d steps=%d) in %.2fs",
         phi, phi_q, dec.radius, dec.n_clusters, dec.growing_steps, t.seconds,

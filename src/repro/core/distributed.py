@@ -34,8 +34,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.common import ceil_div, get_logger, next_multiple
+from repro.common.compat import shard_map
 from repro.core.state import EngineState, INF
+from repro.graph.segment_ops import segment_min_triple
 from repro.graph.structures import EdgeList
+from repro.kernels.edge_relax.ref import edge_relax_candidates
 
 log = get_logger("repro.distributed")
 
@@ -165,60 +168,24 @@ def _attach_halo_plan(g: ShardedGraph, src: np.ndarray, mask: np.ndarray, q: int
 #   relay_w0             covered relay base: offset (d_cover - Delta) else INF
 #   relay_c, relay_p     covered relay center / path weight
 #   frozen               covered | is_center (never receives updates)
-# Relay planes fold state.covered/final_*/offset into a branch-free candidate:
-#   cand_relay = w + relay_w0 clamped at >= 0; INF when not a relay.
-
-
-def pack_planes(state: EngineState, n_pad: int) -> Tuple[jnp.ndarray, ...]:
-    """EngineState -> padded (d, c, pathw, relay_w0, relay_c, relay_p, frozen)."""
-    n = state.n
-
-    def padto(x, fill):
-        return jnp.concatenate([x, jnp.full((n_pad - n,), fill, x.dtype)])
-
-    relay = state.covered
-    big = jnp.int32(2**30)  # additive-safe INF for the relay base
-    relay_w0 = jnp.where(relay, state.offset, big)
-    relay_c = jnp.where(relay, state.final_c, INF)
-    relay_p = jnp.where(relay, state.final_pathw, INF)
-    frozen = state.covered | state.is_center
-    return (
-        padto(state.d, INF), padto(state.c, INF), padto(state.pathw, INF),
-        padto(relay_w0, big), padto(relay_c, INF), padto(relay_p, INF),
-        padto(frozen, True),
-    )
-
-
-def unpack_planes(planes, state: EngineState) -> EngineState:
-    d, c, pw = planes[0], planes[1], planes[2]
-    n = state.n
-    return state._replace(d=d[:n], c=c[:n], pathw=pw[:n])
+# The planes are derived ONCE per grow call from the canonical EngineState by
+# ``core.state.relay_planes`` (see core/backend.ShardedBackend) — not packed
+# and re-padded per call as in the seed engine.
 
 
 def _relax_local(src_d, src_c, src_p, src_rw0, src_rc, src_rp,
                  w, dst_local, edge_mask, delta, q,
                  d, c, pw, frozen):
-    """Device-local relax + lexicographic tuple-min (the reduce-by-key)."""
-    big = jnp.int32(2**30)
-    # live branch: d_u + w, admissible if d_u < delta and w < delta (light)
-    live_ok = (src_d < delta) & (w < delta) & edge_mask
-    d_safe = jnp.where(live_ok, src_d, 0)
-    live_d = jnp.where(live_ok, d_safe + w, INF)
-    # relay branch: rescaled contracted edge, clamped at 0
-    w_red = jnp.maximum(w + jnp.where(src_rw0 >= big, big, src_rw0), 0)
-    relay_ok = (src_rw0 < big) & (w_red < delta) & edge_mask
-    cand_d = jnp.where(relay_ok, w_red, live_d)
-    cand_c = jnp.where(relay_ok, src_rc, jnp.where(live_ok, src_c, INF))
-    p_base = jnp.where(relay_ok, src_rp, jnp.where(live_ok, src_p, 0))
-    p_safe = jnp.where(p_base >= big, 0, p_base)
-    cand_p = jnp.where(relay_ok | live_ok, p_safe + w, INF)
+    """Device-local relax + lexicographic tuple-min (the reduce-by-key).
 
-    d_min = jax.ops.segment_min(cand_d, dst_local, num_segments=q)
-    w1 = cand_d == d_min[dst_local]
-    c_min = jax.ops.segment_min(jnp.where(w1, cand_c, INF), dst_local, num_segments=q)
-    w2 = w1 & (cand_c == c_min[dst_local])
-    p_min = jax.ops.segment_min(jnp.where(w2, cand_p, INF), dst_local, num_segments=q)
-
+    Candidate rule and tuple-min are the shared canonical implementations
+    (``kernels/edge_relax/ref.py`` + ``graph/segment_ops.py``) — the same
+    code every other backend runs, which is what makes the backends
+    byte-identical."""
+    cand_d, cand_c, cand_p = edge_relax_candidates(
+        src_d, src_c, src_p, src_rw0, src_rc, src_rp, w, edge_mask, delta)
+    d_min, c_min, p_min = segment_min_triple(cand_d, cand_c, cand_p,
+                                             dst_local, q)
     upd = (~frozen) & (d_min < d)
     return (
         jnp.where(upd, d_min, d),
@@ -252,6 +219,8 @@ class DistributedEngine:
         self.q = self.graph.nodes_per_device
         self._step = self._build_superstep()
         self._growth = self._build_growth_loop()
+        # device-place the static edge shards once per engine, not per call
+        self.gparts = self.device_put_graph()
 
     # -- sharding helpers ---------------------------------------------------
     def node_sharding(self) -> NamedSharding:
@@ -259,10 +228,6 @@ class DistributedEngine:
 
     def edge_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, P(self.axes, None))
-
-    def device_put_planes(self, planes):
-        ns = self.node_sharding()
-        return tuple(jax.device_put(x, ns) for x in planes)
 
     def device_put_graph(self):
         es = self.edge_sharding()
@@ -331,7 +296,7 @@ class DistributedEngine:
             if comm == "halo":
                 in_specs += [P(axes, None, None)] + [P(axes, None)] * 3
                 args += [send_ids, recv_slot, is_loc, loc_idx]
-            nd, nc, npw, ch = jax.shard_map(
+            nd, nc, npw, ch = shard_map(
                 body, mesh=self.mesh, in_specs=tuple(in_specs),
                 out_specs=out_specs, check_vma=False,
             )(*args)
@@ -367,22 +332,14 @@ class DistributedEngine:
 
     # -- public API matching cluster()'s relax_fn hook ----------------------
     def make_relax_fn(self):
-        """Adapter: cluster(..., relax_fn=engine.make_relax_fn()). Converts
-        EngineState <-> planes around the distributed growth loop."""
-        gparts = self.device_put_graph()
-        n_pad = self.graph.n_pad
+        """Adapter: cluster(..., relax_fn=engine.make_relax_fn()).
 
-        def relax(state: EngineState, delta, half_target, variant):
-            planes = self.device_put_planes(pack_planes(state, n_pad))
-            planes, k, reach, ch = self._growth(
-                planes, gparts, jnp.int32(delta), jnp.int32(half_target),
-                jnp.int32(4 * self.graph.n_nodes), variant=variant,
-            )
-            from repro.core.delta_growing import GrowthStats
-            new_state = unpack_planes(planes, state)
-            return new_state, GrowthStats(steps=k, reached=reach, changed_last=ch)
+        Returns a ``ShardedBackend`` over this engine: the decomposition
+        engine keeps the canonical planes sharded and device-resident for
+        the whole run (one pack, zero per-grow host round-trips)."""
+        from repro.core.backend import ShardedBackend
 
-        return relax
+        return ShardedBackend(self)
 
     # -- dry-run entry: one compiled superstep ------------------------------
     def lower_superstep(self, delta: int = 1 << 20):

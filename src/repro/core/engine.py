@@ -1,0 +1,358 @@
+"""Device-resident CLUSTER / CLUSTER2 orchestrator (paper Alg. 1/2).
+
+The seed's stage loop was host-driven and chatty: per stage it synced the
+uncovered counter, sampled centers with host numpy, and per Δ-doubling synced
+``steps``/``reached`` scalars — and the distributed path re-packed and
+re-padded all node-state planes on every grow call. Against the paper's cost
+model (MR rounds == device supersteps, host round-trips are pure overhead)
+that is exactly the wrong shape.
+
+Here the whole per-stage body is ONE jitted program over the canonical
+padded planes (``EngineState``):
+
+  sample centers (jax.random, resample-capped) -> promote -> reset
+  -> Δ-doubling loop of PartialGrowth calls (backend.grow, traceable)
+  -> cover -> uncovered counter
+
+so a stage costs exactly one host synchronization — the fetch of a small
+int32 stats vector used for the stop decision — and plane pack/pad happens
+once per decomposition (``backend.init_state``), not once per grow call.
+
+Host-sync cost model (counted by ``EngineMetrics`` and checked by the engine
+bench): seed loop = 1 (uncovered) + 2 per grow call (steps, reached) per
+stage, plus one plane pack per grow call on the distributed path; this
+engine = 1 per stage, 1 pack total.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import get_logger
+from repro.core.backend import RelaxBackend, dispatch_grow
+from repro.core.state import (
+    EngineState,
+    INF,
+    cover,
+    finalize_singletons,
+    promote_centers,
+    reset_in_stage,
+    uncovered_count,
+)
+from repro.graph.structures import EdgeList
+
+log = get_logger("repro.engine")
+
+MAX_RESAMPLES = 8  # consecutive empty center draws tolerated inside a stage
+
+
+@dataclass
+class EngineMetrics:
+    """Round/sync accounting (the paper's resource to minimize)."""
+
+    stages: int = 0           # stage-loop iterations (incl. barren resamples)
+    host_syncs: int = 0       # device->host scalar fetches in the stage loop
+    grow_calls: int = 0       # PartialGrowth invocations (Δ-doublings + 1 each)
+    state_transfers: int = 0  # plane pack/pad + device placements
+    resamples: int = 0        # extra center draws taken inside stages
+    growing_steps: int = 0    # total supersteps (the MR-round proxy)
+
+
+@dataclass
+class Decomposition:
+    """Output of CLUSTER / CLUSTER2."""
+
+    n_nodes: int
+    final_c: np.ndarray        # int32 [n] cluster center id per node
+    final_pathw: np.ndarray    # int32 [n] dist-from-center upper bound
+    radius: int                # R_CL(tau) = max final_pathw
+    delta_end: int
+    n_clusters: int
+    n_stages: int
+    growing_steps: int         # total Delta-growing steps (the paper's
+                               # round-complexity proxy)
+    metrics: Optional[EngineMetrics] = None
+
+    def cluster_sizes(self) -> np.ndarray:
+        _, counts = np.unique(self.final_c, return_counts=True)
+        return counts
+
+
+def _empty_decomposition(n: int, metrics: EngineMetrics) -> Decomposition:
+    return Decomposition(
+        n_nodes=n, final_c=np.zeros(n, np.int32),
+        final_pathw=np.zeros(n, np.int32), radius=0, delta_end=1,
+        n_clusters=n, n_stages=0, growing_steps=0, metrics=metrics,
+    )
+
+
+def _sample_centers(key, p, state: EngineState, n: int, max_resamples: int):
+    """Draw a center mask over the REAL node slots, redrawing (with a folded
+    key) while the draw is empty, up to ``max_resamples`` extra attempts.
+
+    Sampling over exactly [n] (never the padded tail) keeps the draw — and
+    therefore the whole decomposition — identical across backends with
+    different padded layouts.
+    """
+    eligible = (~state.covered[:n]) & (~state.is_center[:n])
+
+    def draw(t):
+        u = jax.random.uniform(jax.random.fold_in(key, t), (n,))
+        return (u < p) & eligible
+
+    def cond(carry):
+        t, mask = carry
+        return (~mask.any()) & (t < max_resamples)
+
+    def body(carry):
+        t, _ = carry
+        return t + 1, draw(t + 1)
+
+    t, mask = jax.lax.while_loop(cond, body, (jnp.int32(0), draw(0)))
+    return mask, t
+
+
+def _pad_mask(mask, n_pad: int):
+    n = mask.shape[0]
+    if n_pad == n:
+        return mask
+    return jnp.concatenate([mask, jnp.zeros((n_pad - n,), bool)])
+
+
+@partial(jax.jit, static_argnames=("spec", "variant", "n", "max_resamples"))
+def _cluster_stage(
+    state: EngineState,
+    key,
+    delta,
+    u_count,
+    p_scale,          # f32: gamma * tau * log n
+    max_delta,
+    num_it,
+    graph_args,       # backend edge arrays, TRACED (shape-keyed cache)
+    *,
+    spec,             # backend.grow_spec() (hashable static)
+    variant: str,
+    n: int,
+    max_resamples: int,
+):
+    """One CLUSTER stage as a single device program.
+
+    The jit cache keys on (spec, variant, n, shapes) — NOT on a per-call
+    backend object — so repeated decompositions of same-shaped graphs reuse
+    one compiled stage program, like the seed's jitted partial_growth did.
+
+    Returns (state, delta, stats) with stats = int32 [5]:
+    (n_new, steps, grow_calls, resamples, uncovered_after).
+    """
+
+    def grow(st, dl, half, ni, var):
+        return dispatch_grow(spec, graph_args, st, dl, half, ni, var)
+
+    n_pad = state.d.shape[0]
+    p = jnp.minimum(1.0, p_scale / u_count.astype(jnp.float32))
+    mask, resamples = _sample_centers(key, p, state, n, max_resamples)
+    n_new = jnp.sum(mask).astype(jnp.int32)
+
+    def barren(st):
+        return st, delta, jnp.int32(0), jnp.int32(0)
+
+    def run_stage(st):
+        st = promote_centers(st, _pad_mask(mask, n_pad))
+        st = reset_in_stage(st)
+        # goal: half of the stage's uncovered set, counting the nodes that
+        # just became centers (paper counts them inside V').
+        half_target = jnp.maximum((u_count + 1) // 2 - n_new, 0)
+
+        def cond(carry):
+            _, _, _, _, stop = carry
+            return ~stop
+
+        def body(carry):
+            s, dl, steps, grows, _ = carry
+            s, stats = grow(s, dl, half_target, num_it, variant)
+            steps = steps + stats.steps
+            grows = grows + 1
+            stop = (stats.reached >= half_target) | (dl >= max_delta)
+            dl = jnp.where(stop, dl, jnp.minimum(dl * 2, max_delta))
+            return (s, dl, steps, grows, stop)
+
+        st, dl, steps, grows, _ = jax.lax.while_loop(
+            cond, body,
+            (st, delta, jnp.int32(0), jnp.int32(0), jnp.bool_(False)),
+        )
+        st = cover(st, dl)
+        return st, dl, steps, grows
+
+    state, delta_end, steps, grows = jax.lax.cond(
+        n_new > 0, run_stage, barren, state)
+    stats = jnp.stack([
+        n_new, steps, grows, resamples,
+        uncovered_count(state).astype(jnp.int32),
+    ])
+    return state, delta_end, stats
+
+
+@partial(jax.jit, static_argnames=("spec", "n"))
+def _cluster2_stage(state: EngineState, key, delta, p, num_it, graph_args,
+                    *, spec, n: int):
+    """One CLUSTER2 stage: fixed Δ budget, growth to quiescence."""
+    n_pad = state.d.shape[0]
+    eligible = (~state.covered[:n]) & (~state.is_center[:n])
+    mask = (jax.random.uniform(key, (n,)) < p) & eligible
+    n_new = jnp.sum(mask).astype(jnp.int32)
+
+    def barren(st):
+        return st, jnp.int32(0)
+
+    def run_stage(st):
+        st = promote_centers(st, _pad_mask(mask, n_pad))
+        st = reset_in_stage(st)
+        st, stats = dispatch_grow(spec, graph_args, st, delta, jnp.int32(0),
+                                  num_it, "complete")
+        st = cover(st, delta)
+        return st, stats.steps
+
+    state, steps = jax.lax.cond(n_new > 0, run_stage, barren, state)
+    stats = jnp.stack([
+        n_new, steps, uncovered_count(state).astype(jnp.int32)])
+    return state, stats
+
+
+def _finalize(
+    state: EngineState,
+    n: int,
+    delta_end: int,
+    n_stages: int,
+    total_steps: int,
+    metrics: EngineMetrics,
+) -> Decomposition:
+    state = finalize_singletons(state)
+    final_c = np.asarray(state.final_c[:n])
+    final_pathw = np.asarray(state.final_pathw[:n])
+    assert (final_pathw < np.int32(INF)).all(), "uncovered node escaped finalization"
+    return Decomposition(
+        n_nodes=n,
+        final_c=final_c,
+        final_pathw=final_pathw,
+        radius=int(final_pathw.max()) if n else 0,
+        delta_end=delta_end,
+        n_clusters=int(len(np.unique(final_c))) if n else 0,
+        n_stages=n_stages,
+        growing_steps=total_steps,
+        metrics=metrics,
+    )
+
+
+def run_cluster(
+    edges: EdgeList,
+    backend: RelaxBackend,
+    tau: int,
+    *,
+    gamma: float = 2.0,
+    variant: str = "stop",
+    delta0: int = 1,
+    seed: int = 0,
+    max_stages: int = 64,
+    max_steps_per_phase: int = 0,
+    threshold_const: float = 8.0,
+    max_resamples: int = MAX_RESAMPLES,
+) -> Decomposition:
+    """Paper Algorithm 1 on the device-resident engine."""
+    n = edges.n_nodes
+    metrics = EngineMetrics()
+    if n == 0:
+        return _empty_decomposition(0, metrics)
+    logn = max(math.log(max(n, 2)), 1.0)
+    threshold = max(int(threshold_const * tau * logn), 1)
+    num_it = jnp.int32(max_steps_per_phase or max(2 * n // max(tau, 1), 8))
+    max_delta = jnp.int32(
+        min(np.int64(edges.weight.astype(np.int64).sum()) + 1, 2**30))
+    p_scale = jnp.float32(gamma * tau * logn)
+
+    transfers0 = backend.transfers
+    state = backend.init_state()
+    spec = backend.grow_spec()
+    graph_args = backend.graph_args()
+    key = jax.random.PRNGKey(seed)
+    delta = jnp.int32(delta0)
+    u_host = n
+    total_steps = 0
+    n_stages = 0
+    stage = 0
+
+    while stage < max_stages and u_host >= threshold:
+        state, delta, stats = _cluster_stage(
+            state, jax.random.fold_in(key, stage), delta,
+            jnp.int32(u_host), p_scale, max_delta, num_it, graph_args,
+            spec=spec, variant=variant, n=n,
+            max_resamples=max_resamples,
+        )
+        # the stage's single host synchronization: the stop-decision scalars
+        n_new, steps, grows, resamples, u_host = map(int, np.asarray(stats))
+        metrics.host_syncs += 1
+        metrics.grow_calls += grows
+        metrics.resamples += resamples
+        total_steps += steps
+        stage += 1
+        metrics.stages = stage
+        if n_new > 0:
+            n_stages += 1
+        log.info(
+            "stage %d: centers+%d steps=%d grows=%d resamples=%d uncovered=%d",
+            stage, n_new, steps, grows, resamples, u_host,
+        )
+
+    metrics.growing_steps = total_steps
+    metrics.state_transfers = backend.transfers - transfers0
+    return _finalize(state, n, int(delta), n_stages, total_steps, metrics)
+
+
+def run_cluster2(
+    edges: EdgeList,
+    backend: RelaxBackend,
+    tau: int,
+    *,
+    delta: int,
+    seed: int = 0,
+) -> Decomposition:
+    """Paper Algorithm 2 re-clustering pass (fixed Δ = 2 R_CL(tau))."""
+    n = edges.n_nodes
+    metrics = EngineMetrics()
+    if n == 0:
+        return _empty_decomposition(0, metrics)
+    num_it = jnp.int32(4 * n)
+    transfers0 = backend.transfers
+    state = backend.init_state()
+    spec = backend.grow_spec()
+    graph_args = backend.graph_args()
+    key = jax.random.PRNGKey(seed)
+    stages = int(math.ceil(math.log2(max(n, 2)))) + 1
+    total_steps = 0
+    stage_count = 0
+    u_host = n
+
+    for i in range(1, stages + 1):
+        if u_host == 0:
+            break
+        p = 1.0 if i == stages else min(1.0, (2.0 ** i) / n)
+        state, stats = _cluster2_stage(
+            state, jax.random.fold_in(key, i), jnp.int32(delta),
+            jnp.float32(p), num_it, graph_args, spec=spec, n=n,
+        )
+        n_new, steps, u_host = map(int, np.asarray(stats))
+        metrics.host_syncs += 1
+        total_steps += steps
+        metrics.stages += 1
+        if n_new > 0:
+            stage_count += 1
+            metrics.grow_calls += 1
+
+    metrics.growing_steps = total_steps
+    metrics.state_transfers = backend.transfers - transfers0
+    return _finalize(state, n, int(delta), stage_count, total_steps, metrics)

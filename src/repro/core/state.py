@@ -56,6 +56,55 @@ def init_state(n_nodes: int) -> EngineState:
                        offset=z, covered=f, is_center=f)
 
 
+def pad_state(state: EngineState, n_pad: int) -> EngineState:
+    """Pad the canonical planes to ``n_pad`` slots.
+
+    Tail slots are inert permanent centers: they are never sampled
+    (``eligible`` excludes centers), never receive updates (receivers are
+    non-centers), never counted (uncovered/reached counts exclude centers),
+    and never emit candidates (every padded edge is masked by its backend).
+    This is done ONCE per decomposition — backends keep the padded state
+    device-resident across all stages.
+    """
+    n = state.n
+    if n_pad == n:
+        return state
+    if n_pad < n:
+        raise ValueError(f"n_pad {n_pad} < n {n}")
+
+    def padto(x, fill):
+        return jnp.concatenate([x, jnp.full((n_pad - n,), fill, x.dtype)])
+
+    return EngineState(
+        d=padto(state.d, INF),
+        c=padto(state.c, INF),
+        pathw=padto(state.pathw, INF),
+        final_c=padto(state.final_c, INF),
+        final_pathw=padto(state.final_pathw, INF),
+        offset=padto(state.offset, 0),
+        covered=padto(state.covered, False),
+        is_center=padto(state.is_center, True),
+    )
+
+
+def relay_planes(state: EngineState):
+    """Branch-free relay candidate planes ``(rw0, rc, rp, frozen)``.
+
+    Covered nodes relay their center's wave with the contraction rescaling
+    (``offset``) folded in; everyone else gets an additive-safe BIG so the
+    relay branch is inadmissible. ``frozen`` marks nodes that never receive
+    updates. These planes only change at ``cover()`` time, so backends derive
+    them once per grow call (cheap elementwise ops that stay on device).
+    """
+    big = jnp.int32(2**30)
+    relay = state.covered
+    rw0 = jnp.where(relay, state.offset, big)
+    rc = jnp.where(relay, state.final_c, INF)
+    rp = jnp.where(relay, state.final_pathw, INF)
+    frozen = state.covered | state.is_center
+    return rw0, rc, rp, frozen
+
+
 def promote_centers(state: EngineState, new_centers: jnp.ndarray) -> EngineState:
     """Mark ``new_centers`` (bool mask) as permanent centers with state
     (self, 0). Centers self-assign: final_c = self, final_pathw = 0."""

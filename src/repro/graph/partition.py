@@ -66,6 +66,25 @@ def apply_partition(edges: EdgeList, perm: np.ndarray) -> Tuple[EdgeList, np.nda
     )
 
 
+def partition_for_backend(
+    edges: EdgeList,
+    backend: str,
+    n_devices: int,
+    centers: np.ndarray = None,
+) -> np.ndarray:
+    """Backend-aware partition choice (perm, new id -> old id).
+
+    Only the sharded backend pays for edge cuts (halo/collective bytes), so
+    it gets the cluster-locality relabeling when a pilot decomposition's
+    ``centers`` is available; the single-device and Pallas backends keep the
+    identity ordering (their dst-sorted layouts are already locality-friendly
+    and relabeling would only churn the quotient ids).
+    """
+    if backend != "sharded" or n_devices <= 1 or centers is None:
+        return range_partition(edges.n_nodes, n_devices)
+    return cluster_partition(centers, n_devices)
+
+
 def cut_fraction(edges: EdgeList, n_devices: int) -> float:
     """Fraction of edges crossing device boundaries under contiguous ranges."""
     q = ceil_div(edges.n_nodes, n_devices)

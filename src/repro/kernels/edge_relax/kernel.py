@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.common.compat import tpu_compiler_params
+
 INF = jnp.int32(2**31 - 1)
 BIG = jnp.int32(2**30)
 
@@ -138,7 +140,7 @@ def edge_relax_pallas(
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
     )(block_tile, delta, d_src, c_src, p_src, rw0, rc, rp, w, dst, mask)

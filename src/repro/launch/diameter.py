@@ -1,8 +1,11 @@
 """Graph-analytics launcher: the paper's diameter-approximation pipeline.
 
   PYTHONPATH=src python -m repro.launch.diameter --graph road --n 20000 \
-      [--variant stop] [--delta-init avg] [--tau 16] [--distributed] \
-      [--comm halo] [--compare-sssp]
+      [--variant stop] [--delta-init avg] [--tau 16] \
+      [--backend single|sharded|pallas] [--comm halo] [--partition cluster] \
+      [--compare-sssp]
+
+``--distributed`` is kept as an alias for ``--backend sharded``.
 """
 from __future__ import annotations
 
@@ -12,9 +15,10 @@ import jax
 
 from repro.common import get_logger
 from repro.config.base import GraphEngineConfig
-from repro.core import approximate_diameter, diameter_2approx_sssp
+from repro.core import approximate_diameter, cluster, diameter_2approx_sssp
 from repro.core.distributed import DistributedEngine
 from repro.graph import grid_mesh, random_geometric, social_like
+from repro.graph.partition import apply_partition, partition_for_backend
 from repro.launch.mesh import host_device_mesh
 
 log = get_logger("repro.diameter")
@@ -41,30 +45,46 @@ def main() -> int:
     ap.add_argument("--variant", default="stop", choices=["stop", "complete"])
     ap.add_argument("--delta-init", default="avg")
     ap.add_argument("--cluster2", action="store_true")
-    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--backend", default="single",
+                    choices=["single", "sharded", "pallas"])
+    ap.add_argument("--distributed", action="store_true",
+                    help="alias for --backend sharded")
     ap.add_argument("--comm", default="allgather", choices=["allgather", "halo"])
+    ap.add_argument("--partition", default="range", choices=["range", "cluster"],
+                    help="sharded backend node relabeling (cluster = "
+                         "locality-aware, from a pilot decomposition)")
     ap.add_argument("--compare-sssp", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    backend_kind = "sharded" if args.distributed else args.backend
 
     g = build_graph(args.graph, args.n, args.seed)
     log.info("graph: %d nodes, %d directed edges", g.n_nodes, g.n_edges)
     cfg = GraphEngineConfig(variant=args.variant, delta_init=args.delta_init,
-                            use_cluster2=args.cluster2, seed=args.seed)
+                            use_cluster2=args.cluster2, seed=args.seed,
+                            backend=backend_kind, comm=args.comm)
 
     relax_fn = None
-    if args.distributed:
+    if backend_kind == "sharded":
         mesh = host_device_mesh()
+        if args.partition == "cluster":
+            # pilot decomposition -> locality-aware relabeling -> smaller halo
+            pilot = cluster(g, max(args.tau or 16, 4), seed=args.seed)
+            n_dev = int(jax.device_count())
+            perm = partition_for_backend(g, "sharded", n_dev, pilot.final_c)
+            g, _ = apply_partition(g, perm)
+            log.info("cluster partition applied over %d devices", n_dev)
         eng = DistributedEngine(g, mesh, comm=args.comm)
         relax_fn = eng.make_relax_fn()
-        log.info("distributed engine on %s devices, comm=%s",
+        log.info("sharded backend on %s devices, comm=%s",
                  dict(mesh.shape), args.comm)
+    # single/pallas: approximate_diameter builds the backend from cfg.backend
 
     est = approximate_diameter(g, cfg, tau=args.tau or None, relax_fn=relax_fn)
     log.info("Phi_approx = %d  (quotient %d + 2 x radius %d)  "
-             "clusters=%d stages=%d growing_steps=%d  %.2fs",
+             "clusters=%d stages=%d growing_steps=%d connected=%s  %.2fs",
              est.phi_approx, est.phi_quotient, est.radius, est.n_clusters,
-             est.n_stages, est.growing_steps, est.seconds)
+             est.n_stages, est.growing_steps, est.connected, est.seconds)
 
     if args.compare_sssp:
         lb, ub, ss = diameter_2approx_sssp(g, seed=args.seed)

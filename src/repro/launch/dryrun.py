@@ -11,6 +11,7 @@ production meshes and extract roofline terms.
   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--smoke-scale]
   PYTHONPATH=src python -m repro.launch.dryrun --engine          # paper engine row
+                                  # (the ShardedBackend superstep — one MR round)
 
 Each cell: jit(step, in_shardings=..., out_shardings=...).lower(*specs)
 .compile(); prints memory_analysis() (fits-per-device proof) and

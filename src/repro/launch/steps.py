@@ -417,7 +417,12 @@ def _recsys_cell(cfg: RecsysConfig, shape: ShapeSpec, mesh: Mesh,
 
 def _engine_cell(cfg: GraphEngineConfig, mesh: Mesh, n_nodes: int = 1 << 24,
                  avg_degree: int = 5) -> Cell:
-    """One Δ-growing superstep on a roads-USA-scale synthetic graph."""
+    """One Δ-growing superstep on a roads-USA-scale synthetic graph.
+
+    This is the inner step of the ShardedBackend (core/backend.py): the
+    decomposition engine keeps the canonical planes device-resident and runs
+    this superstep inside a while_loop, so the lowered collective profile
+    here is exactly the per-MR-round cost of a production run."""
     from repro.core.distributed import DistributedEngine
     from repro.graph.structures import EdgeList
 

@@ -1,0 +1,20 @@
+"""Import hypothesis if present; otherwise provide a stub that lets the
+suite collect everywhere and marks property tests skipped (the container
+does not ship hypothesis; CI installs it via requirements-dev.txt)."""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    import pytest as _pytest
+
+    def given(**kw):
+        return lambda fn: _pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

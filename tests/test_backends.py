@@ -1,0 +1,92 @@
+"""Cross-backend parity: SingleDevice / Sharded (allgather + halo) / Pallas
+must produce byte-identical decompositions for a fixed seed, and the
+device-resident engine must hold its sync/transfer contract (plane pack at
+most once per cluster() call, exactly one host sync per stage)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import cluster, cluster2, make_backend
+from repro.graph import grid_mesh, random_geometric, social_like
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _paper_graphs():
+    # one per paper family (Table 1), CPU-sized
+    return {
+        "road": random_geometric(1500, avg_degree=3.0, seed=1),
+        "social": social_like(8, 6, seed=2, weight_dist="uniform", high=2**20),
+        "mesh": grid_mesh(24, "bimodal", heavy_w=500, heavy_p=0.15, seed=3),
+    }
+
+
+@pytest.mark.parametrize("gname", ["road", "social", "mesh"])
+def test_single_vs_pallas_byte_identical(gname):
+    g = _paper_graphs()[gname]
+    a = cluster(g, 12, seed=5)
+    b = cluster(g, 12, seed=5, backend="pallas")
+    np.testing.assert_array_equal(a.final_c, b.final_c)
+    np.testing.assert_array_equal(a.final_pathw, b.final_pathw)
+    assert a.growing_steps == b.growing_steps
+    assert a.delta_end == b.delta_end
+
+
+def test_cluster2_backend_parity():
+    g = grid_mesh(24, "uniform", high=100, seed=6)
+    a = cluster2(g, 8, seed=1)
+    b = cluster2(g, 8, seed=1, backend="pallas")
+    np.testing.assert_array_equal(a.final_c, b.final_c)
+    np.testing.assert_array_equal(a.final_pathw, b.final_pathw)
+
+
+def test_engine_sync_and_transfer_contract():
+    g = random_geometric(2000, avg_degree=3.0, seed=2)
+    dec = cluster(g, 8, seed=4)
+    m = dec.metrics
+    assert m.state_transfers <= 1, "planes must pack at most once per cluster()"
+    assert m.host_syncs == m.stages, "a stage costs exactly one host sync"
+    assert m.grow_calls >= m.stages  # >= one PartialGrowth per covering stage
+
+
+def test_make_backend_factory():
+    g = grid_mesh(8, "unit")
+    assert make_backend(g, "single").kind == "single"
+    assert make_backend(g, "pallas").kind == "pallas"
+    be = make_backend(g, "pallas")
+    assert make_backend(g, be) is be
+    with pytest.raises(ValueError):
+        make_backend(g, "nope")
+
+
+def test_sharded_backends_byte_identical():
+    """allgather + halo on a forced 4-device host mesh == single device,
+    byte for byte (subprocess so XLA device count doesn't leak)."""
+    code = textwrap.dedent("""
+    import jax, numpy as np
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    from repro.graph import grid_mesh
+    from repro.core import cluster
+    from repro.core.distributed import DistributedEngine
+    g = grid_mesh(24, "bimodal", heavy_w=500, heavy_p=0.15, seed=3)
+    ref = cluster(g, 12, seed=5)
+    for comm in ("allgather", "halo"):
+        eng = DistributedEngine(g, mesh, comm=comm)
+        out = cluster(g, 12, seed=5, relax_fn=eng.make_relax_fn())
+        assert np.array_equal(ref.final_c, out.final_c), comm
+        assert np.array_equal(ref.final_pathw, out.final_pathw), comm
+        assert out.metrics.state_transfers <= 1, out.metrics
+        assert out.metrics.host_syncs == out.metrics.stages, out.metrics
+    print("SHARDED-PARITY-OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED-PARITY-OK" in out.stdout

@@ -5,7 +5,8 @@ import math
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     approximate_diameter,
@@ -176,3 +177,59 @@ def test_property_diameter_conservative(side, seed, heavy_p):
     g = grid_mesh(side, "bimodal", heavy_w=997, heavy_p=heavy_p, seed=seed)
     est = approximate_diameter(g, tau=4)
     assert est.phi_approx >= _true_diameter(g)
+
+
+# ---------------------------------------------------------------------------
+# degenerate inputs: empty / single-node / edgeless / disconnected
+# ---------------------------------------------------------------------------
+
+def _edgeless(n):
+    z = np.array([], dtype=np.int32)
+    return EdgeList(n, z, z, z)
+
+
+def test_empty_graph():
+    est = approximate_diameter(_edgeless(0), tau=4)
+    assert est.phi_approx == 0 and est.radius == 0
+    dec = cluster(_edgeless(0), 4)
+    assert dec.n_nodes == 0 and dec.n_clusters == 0
+
+
+def test_single_node_graph():
+    est = approximate_diameter(_edgeless(1), tau=4)
+    assert est.phi_approx == 0 and est.connected
+    dec = cluster(_edgeless(1), 4)
+    assert dec.n_clusters == 1 and dec.radius == 0
+
+
+def test_edgeless_nodes_become_singletons():
+    dec = cluster(_edgeless(7), 2)
+    assert (dec.final_c == np.arange(7)).all()
+    assert (dec.final_pathw == 0).all()
+    est = approximate_diameter(_edgeless(7), tau=2)
+    assert not est.connected  # 7 isolated nodes: diameter is infinite
+
+
+def test_disconnected_graph_flagged():
+    # two disjoint triangles
+    u = np.array([0, 1, 2, 3, 4, 5], np.int32)
+    v = np.array([1, 2, 0, 4, 5, 3], np.int32)
+    g = EdgeList.from_undirected(6, u, v, np.ones(6, np.int32))
+    est = approximate_diameter(g, tau=2)
+    assert not est.connected
+    # the estimate still upper-bounds the largest FINITE distance (1 here)
+    assert est.phi_approx >= 1
+    dec = cluster2(g, 2, seed=0)
+    assert len(np.unique(dec.final_c)) == dec.n_clusters
+
+
+def test_resample_cap_bounds_stage_loop():
+    """With a vanishing sampling probability the seed's resample path looped
+    forever without consuming max_stages; now barren draws are capped and
+    count against the stage budget."""
+    g = grid_mesh(16, "uniform", high=10, seed=0)
+    dec = cluster(g, 4, gamma=1e-12, seed=0, max_stages=3, threshold_const=0.01)
+    assert dec.metrics.stages <= 3
+    assert dec.metrics.resamples > 0
+    # nothing was ever sampled -> everyone is a singleton, still a partition
+    assert (dec.final_c == np.arange(g.n_nodes)).all()
