@@ -35,7 +35,8 @@ def true_diameter(edges: EdgeList, exact_limit: int = 9_000) -> int:
         fin = d[np.isfinite(d)]
         return int(fin.max())
     from repro.core import farthest_point_lower_bound
-    return farthest_point_lower_bound(edges, rounds=6)
+    lb, _connected = farthest_point_lower_bound(edges, rounds=6)
+    return lb
 
 
 def benchmark_graphs(scale: float = 1.0) -> Dict[str, EdgeList]:

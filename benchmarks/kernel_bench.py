@@ -76,7 +76,7 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
     Device-resident engine: one sync per stage, one pack total. Asserts the
     acceptance criteria: pack <= 1 per cluster() call, syncs == stages.
     """
-    from repro.core import cluster
+    from repro.core import approximate_diameter, cluster
     from repro.graph import random_geometric
 
     g = random_geometric(n, avg_degree=3.0, seed=1)
@@ -100,6 +100,28 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
         "plane_packs_chatty_loop": old_packs,
         "sync_reduction": round(old_syncs / max(m.host_syncs, 1), 2),
         "seconds": round(dt, 2),
+    }
+
+    # full pipeline: decompose -> device quotient -> batched BF solve, at
+    # the pipeline's own production tau (paper: quotient ~ n/1000 nodes).
+    # Acceptance: <= 8 host syncs end-to-end on the bench graph.
+    t0 = time.perf_counter()
+    est = approximate_diameter(g)
+    dt_pipe = time.perf_counter() - t0
+    pm = est.pipeline
+    assert pm is not None
+    assert pm.total_host_syncs <= 8, f"pipeline ran {pm.total_host_syncs} syncs"
+    row["pipeline"] = {
+        "phi_approx": est.phi_approx,
+        "n_clusters": est.n_clusters,
+        "quotient_edges": pm.n_quotient_edges,
+        "host_syncs_total": pm.total_host_syncs,
+        "host_syncs_decompose": pm.decompose_syncs,
+        "host_syncs_finalize": pm.finalize_syncs,
+        "host_syncs_quotient": pm.quotient_syncs,
+        "host_syncs_solve": pm.solve_syncs,
+        "solve_supersteps": pm.solve_supersteps,
+        "seconds": round(dt_pipe, 2),
     }
     with open(out_path, "w") as f:
         json.dump(row, f, indent=1)

@@ -25,7 +25,7 @@ def run(scale: float = 1.0):
         t_cluster = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        lb, ub, supersteps = diameter_2approx_sssp(g, seed=7)
+        lb, ub, supersteps, _connected = diameter_2approx_sssp(g, seed=7)
         t_sssp = time.perf_counter() - t0
 
         rows.append({

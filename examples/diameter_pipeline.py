@@ -35,5 +35,5 @@ for name, g in graphs.items():
         print(f"{name:14s} CL-{variant:8s} {est.phi_approx:12d} "
               f"{est.growing_steps:7d} {time.time()-t0:6.1f}")
     t0 = time.time()
-    lb, ub, ss = diameter_2approx_sssp(g)
+    lb, ub, ss, _conn = diameter_2approx_sssp(g)
     print(f"{name:14s} {'SSSP-BF':10s} {ub:12d} {ss:7d} {time.time()-t0:6.1f}")

@@ -10,13 +10,29 @@ from repro.core.backend import (
 )
 from repro.core.engine import EngineMetrics, run_cluster, run_cluster2
 from repro.core.cluster import cluster, cluster2, Decomposition
-from repro.core.quotient import build_quotient, quotient_diameter, QuotientGraph
-from repro.core.diameter import approximate_diameter, DiameterEstimate, tau_for
+from repro.core.quotient import (
+    build_quotient,
+    build_quotient_device,
+    build_quotient_numpy,
+    quotient_diameter,
+    quotient_diameter_device,
+    quotient_diameter_minplus,
+    DeviceQuotient,
+    QuotientGraph,
+)
+from repro.core.diameter import (
+    approximate_diameter,
+    approximate_diameter_batch,
+    DiameterEstimate,
+    PipelineMetrics,
+    tau_for,
+)
 from repro.core.sssp import (
     bellman_ford,
     delta_stepping,
     diameter_2approx_sssp,
     farthest_point_lower_bound,
+    multi_source_bellman_ford,
 )
 
 __all__ = [
@@ -40,13 +56,21 @@ __all__ = [
     "cluster2",
     "Decomposition",
     "build_quotient",
+    "build_quotient_device",
+    "build_quotient_numpy",
     "quotient_diameter",
+    "quotient_diameter_device",
+    "quotient_diameter_minplus",
+    "DeviceQuotient",
     "QuotientGraph",
     "approximate_diameter",
+    "approximate_diameter_batch",
     "DiameterEstimate",
+    "PipelineMetrics",
     "tau_for",
     "bellman_ford",
     "delta_stepping",
     "diameter_2approx_sssp",
     "farthest_point_lower_bound",
+    "multi_source_bellman_ford",
 ]

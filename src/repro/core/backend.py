@@ -71,6 +71,14 @@ class RelaxBackend(Protocol):
         backend instance) hits the compile cache instead of retracing."""
         ...
 
+    def quotient_args(self) -> Tuple[jnp.ndarray, ...]:
+        """Flat device ``(src, dst, weight, mask)`` edge views for the
+        quotient pass (``core/quotient.py``) — the SAME device buffers the
+        backend already holds, so building the quotient costs no host
+        round-trip. ``mask`` marks real (non-padding) edges; padded entries
+        may carry phantom node ids >= n_nodes."""
+        ...
+
 
 class GrowSpec(tuple):
     """(kind, *static_meta) — the static half of a backend's grow call.
@@ -135,6 +143,10 @@ class SingleDeviceBackend:
 
     def graph_args(self):
         return (self.src, self.dst, self.weight)
+
+    def quotient_args(self):
+        return (self.src, self.dst, self.weight,
+                jnp.ones(self.src.shape, dtype=bool))
 
     def grow(self, state, delta, half_target, num_it, variant):
         return partial_growth(
@@ -213,6 +225,12 @@ class PallasBackend:
     def graph_args(self):
         return (self._bsrc, self._bdst, self._bw, self._bmask, self._btile)
 
+    def quotient_args(self):
+        # the blocked layout, flattened: padding slots point at the phantom
+        # node and are masked out
+        return (self._bsrc.reshape(-1), self._bdst.reshape(-1),
+                self._bw.reshape(-1), self._bmask.reshape(-1).astype(bool))
+
     def grow(self, state, delta, half_target, num_it, variant):
         return _pallas_growth(
             state, self._bsrc, self._bdst, self._bw, self._bmask, self._btile,
@@ -257,6 +275,16 @@ class ShardedBackend:
 
     def graph_args(self):
         return ()
+
+    def quotient_args(self):
+        # per-device [P, E_loc] shards, flattened with destinations mapped
+        # back to global ids (dst_local + owner * nodes_per_device)
+        g = self.eng.graph
+        P = g.src.shape[0]
+        offs = (jnp.arange(P, dtype=jnp.int32)
+                * jnp.int32(g.nodes_per_device))[:, None]
+        return (g.src.reshape(-1), (g.dst_local + offs).reshape(-1),
+                g.weight.reshape(-1), g.edge_mask.reshape(-1).astype(bool))
 
     def grow(self, state, delta, half_target, num_it, variant):
         rw0, rc, rp, frozen = relay_planes(state)

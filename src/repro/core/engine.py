@@ -62,6 +62,7 @@ class EngineMetrics:
     state_transfers: int = 0  # plane pack/pad + device placements
     resamples: int = 0        # extra center draws taken inside stages
     growing_steps: int = 0    # total supersteps (the MR-round proxy)
+    finalize_syncs: int = 0   # device->host fetches of the final planes
 
 
 @dataclass
@@ -78,6 +79,11 @@ class Decomposition:
     growing_steps: int         # total Delta-growing steps (the paper's
                                # round-complexity proxy)
     metrics: Optional[EngineMetrics] = None
+    # device-resident copies of the final planes (length n, sliced from the
+    # padded layout) — the quotient stage consumes these without a host
+    # round-trip; None for hand-built decompositions
+    final_c_dev: Optional[jnp.ndarray] = None
+    final_pathw_dev: Optional[jnp.ndarray] = None
 
     def cluster_sizes(self) -> np.ndarray:
         _, counts = np.unique(self.final_c, return_counts=True)
@@ -233,8 +239,12 @@ def _finalize(
     metrics: EngineMetrics,
 ) -> Decomposition:
     state = finalize_singletons(state)
-    final_c = np.asarray(state.final_c[:n])
-    final_pathw = np.asarray(state.final_pathw[:n])
+    fc_dev = state.final_c[:n]
+    fp_dev = state.final_pathw[:n]
+    # ONE packed device->host fetch for both final planes
+    planes = np.asarray(jnp.stack([fc_dev, fp_dev]))
+    metrics.finalize_syncs += 1
+    final_c, final_pathw = planes[0], planes[1]
     assert (final_pathw < np.int32(INF)).all(), "uncovered node escaped finalization"
     return Decomposition(
         n_nodes=n,
@@ -246,6 +256,8 @@ def _finalize(
         n_stages=n_stages,
         growing_steps=total_steps,
         metrics=metrics,
+        final_c_dev=fc_dev,
+        final_pathw_dev=fp_dev,
     )
 
 

@@ -19,6 +19,18 @@ import jax.numpy as jnp
 INF = jnp.int32(2**31 - 1)
 
 
+def _sentinel(x: jnp.ndarray):
+    """Dtype-matched masking sentinel for the tie-break passes.
+
+    For int32 this is exactly the engine's INF; for wider integer dtypes
+    (the quotient pass coalesces int64 weights) it is the dtype max, so a
+    masked-out candidate can never beat a real one.
+    """
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    return jnp.asarray(jnp.iinfo(x.dtype).max, x.dtype)
+
+
 @partial(jax.jit, static_argnames=("num_segments",))
 def segment_min_pair(
     cand_d: jnp.ndarray,
@@ -29,7 +41,7 @@ def segment_min_pair(
     """Lexicographic (d, c) segment-min. Returns per-segment (d_min, c_min)."""
     d_min = jax.ops.segment_min(cand_d, seg, num_segments=num_segments)
     is_winner = cand_d == d_min[seg]
-    c_masked = jnp.where(is_winner, cand_c, INF)
+    c_masked = jnp.where(is_winner, cand_c, _sentinel(cand_c))
     c_min = jax.ops.segment_min(c_masked, seg, num_segments=num_segments)
     return d_min, c_min
 
@@ -45,9 +57,11 @@ def segment_min_triple(
     """(d, c, pathw) lexicographic segment-min (three chained passes)."""
     d_min = jax.ops.segment_min(cand_d, seg, num_segments=num_segments)
     w1 = cand_d == d_min[seg]
-    c_min = jax.ops.segment_min(jnp.where(w1, cand_c, INF), seg, num_segments=num_segments)
+    c_min = jax.ops.segment_min(
+        jnp.where(w1, cand_c, _sentinel(cand_c)), seg, num_segments=num_segments)
     w2 = w1 & (cand_c == c_min[seg])
-    p_min = jax.ops.segment_min(jnp.where(w2, cand_p, INF), seg, num_segments=num_segments)
+    p_min = jax.ops.segment_min(
+        jnp.where(w2, cand_p, _sentinel(cand_p)), seg, num_segments=num_segments)
     return d_min, c_min, p_min
 
 

@@ -85,12 +85,19 @@ def main() -> int:
              "clusters=%d stages=%d growing_steps=%d connected=%s  %.2fs",
              est.phi_approx, est.phi_quotient, est.radius, est.n_clusters,
              est.n_stages, est.growing_steps, est.connected, est.seconds)
+    if est.pipeline is not None:
+        pm = est.pipeline
+        log.info("pipeline host syncs: %d total (decompose %d + finalize %d "
+                 "+ quotient %d + solve %d); solve supersteps=%d q_edges=%d",
+                 pm.total_host_syncs, pm.decompose_syncs, pm.finalize_syncs,
+                 pm.quotient_syncs, pm.solve_syncs, pm.solve_supersteps,
+                 pm.n_quotient_edges)
 
     if args.compare_sssp:
-        lb, ub, ss = diameter_2approx_sssp(g, seed=args.seed)
-        log.info("SSSP-BF: lower=%d upper=%d supersteps=%d  "
+        lb, ub, ss, conn = diameter_2approx_sssp(g, seed=args.seed)
+        log.info("SSSP-BF: lower=%d upper=%d supersteps=%d connected=%s  "
                  "(CLUSTER rounds: %d -> %.1fx fewer)",
-                 lb, ub, ss, est.growing_steps,
+                 lb, ub, ss, conn, est.growing_steps,
                  ss / max(est.growing_steps, 1))
     return 0
 

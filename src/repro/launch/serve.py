@@ -1,7 +1,11 @@
-"""Batched serving driver: prefill + steady-state decode with a KV cache.
+"""Batched serving driver: prefill + steady-state decode with a KV cache,
+plus a graph-analytics mode serving diameter queries over many small graphs
+through ONE compiled pipeline (``approximate_diameter_batch``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --mode graph-diameter \
+      --batch 8 --graph-n 2000 [--graph road] [--tau 12]
 """
 from __future__ import annotations
 
@@ -19,15 +23,56 @@ from repro.models import transformer as tf_mod
 log = get_logger("repro.serve")
 
 
+def serve_graph_diameter(args) -> int:
+    """Steady-state diameter serving: a batch of same-sized graphs shares
+    one compiled decompose->quotient->solve pipeline, so graph 2..N pay
+    only execution, not compilation (the serving win this mode measures)."""
+    from repro.config.base import GraphEngineConfig
+    from repro.core import approximate_diameter_batch
+    from repro.launch.diameter import build_graph
+
+    graphs = [build_graph(args.graph, args.graph_n, seed=s)
+              for s in range(args.batch)]
+    cfg = GraphEngineConfig(backend=args.backend)
+    # ONE batch call so every graph shares the same edge-pad bucket (two
+    # calls would pad to different group maxima and recompile); per-graph
+    # wall time comes from each estimate's own Timer.
+    ests = approximate_diameter_batch(graphs, cfg, tau=args.tau or None)
+    for i, est in enumerate(ests):
+        log.info("graph[%d]: phi=%d clusters=%d connected=%s host_syncs=%d "
+                 "%.3fs", i, est.phi_approx, est.n_clusters, est.connected,
+                 est.pipeline.total_host_syncs if est.pipeline else -1,
+                 est.seconds)
+    t_first = ests[0].seconds
+    warm = [e.seconds for e in ests[1:]]
+    per_warm = sum(warm) / max(len(warm), 1)
+    log.info("first graph %.2fs (compile), steady state %.3fs/graph "
+             "(%.1f graphs/s, %.1fx amortization)",
+             t_first, per_warm, 1.0 / max(per_warm, 1e-9),
+             t_first / max(per_warm, 1e-9))
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="lm", choices=["lm", "graph-diameter"])
     ap.add_argument("--arch", default="gemma2-9b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # graph-diameter mode
+    ap.add_argument("--graph", default="road",
+                    choices=["road", "social", "mesh"])
+    ap.add_argument("--graph-n", type=int, default=2000)
+    ap.add_argument("--tau", type=int, default=0)
+    ap.add_argument("--backend", default="single",
+                    choices=["single", "sharded", "pallas"])
     args = ap.parse_args()
+
+    if args.mode == "graph-diameter":
+        return serve_graph_diameter(args)
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(0)

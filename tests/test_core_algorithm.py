@@ -58,11 +58,66 @@ def test_delta_stepping_matches_bellman_ford():
     np.testing.assert_array_equal(bf.dist, ds.dist)
 
 
+def test_delta_stepping_skips_empty_buckets():
+    """Regression: the bucket loop used to crawl b+1 through every EMPTY
+    bucket (>= 2 supersteps each). On a sparse-weight path graph (weights
+    1000, delta 10 -> ~100 empty buckets per hop) the jump to the next
+    non-empty bucket must keep supersteps proportional to the number of
+    OCCUPIED buckets, not to max_dist / delta."""
+    n = 50
+    u = np.arange(n - 1, dtype=np.int32)
+    g = EdgeList.from_undirected(n, u, u + 1, np.full(n - 1, 1000, np.int32))
+    bf = bellman_ford(g, 0)
+    ds = delta_stepping(g, 0, delta=10)
+    np.testing.assert_array_equal(bf.dist, ds.dist)
+    # 49 occupied buckets; the old crawl needed ~2 * 49 * 100 supersteps
+    assert ds.supersteps <= 4 * n, ds.supersteps
+
+
+def test_multi_source_bf_matches_dijkstra_and_survives_max_weights():
+    from repro.core import multi_source_bellman_ford
+
+    g = random_connected(150, 500, seed=8, weight_dist="uniform", high=1000)
+    res = multi_source_bellman_ford(g, [0, 7, 42])
+    assert res.connected
+    for i, s in enumerate([0, 7, 42]):
+        truth = _true_sssp(g, s)
+        np.testing.assert_array_equal(res.dist[i], truth.astype(np.int64))
+    # regression: maximum legal edge weight (2^30 - 1) overflows int32 after
+    # a couple of hops — the solve must escalate to int64, not wrap negative
+    n = 6
+    u = np.arange(n - 1, dtype=np.int32)
+    gp = EdgeList.from_undirected(n, u, u + 1,
+                                  np.full(n - 1, 2**30 - 1, np.int32))
+    r = multi_source_bellman_ford(gp, [0])
+    assert (r.dist >= 0).all()
+    assert int(r.dist[0][-1]) == 5 * (2**30 - 1)
+
+
 def test_sssp_2approx_bounds():
     g = grid_mesh(10, "unit")
-    lb, ub, _ = diameter_2approx_sssp(g)
+    lb, ub, _, connected = diameter_2approx_sssp(g)
     true = _true_diameter(g)
     assert lb <= true <= ub
+    assert connected
+
+
+def test_sssp_estimators_flag_disconnected():
+    """diameter_2approx_sssp / farthest_point_lower_bound only bound
+    finite-distance pairs on disconnected inputs — they must say so."""
+    from repro.core import farthest_point_lower_bound
+
+    u = np.array([0, 1, 2, 3, 4, 5], np.int32)
+    v = np.array([1, 2, 0, 4, 5, 3], np.int32)
+    g = EdgeList.from_undirected(6, u, v, np.ones(6, np.int32))
+    lb, ub, _, connected = diameter_2approx_sssp(g, seed=0)
+    assert not connected
+    assert lb >= 1  # still bounds the source's component
+    lb2, connected2 = farthest_point_lower_bound(g, rounds=3, seed=0)
+    assert not connected2
+    assert lb2 >= 1
+    g_conn = grid_mesh(6, "unit")
+    assert farthest_point_lower_bound(g_conn, rounds=3)[1]
 
 
 # ---------------------------------------------------------------------------
@@ -138,8 +193,8 @@ def test_quotient_minplus_matches_scipy():
     dec = cluster(g, 6, seed=0)
     q = build_quotient(g, dec)
     d1, connected = quotient_diameter(q)
-    d2 = quotient_diameter_minplus(q)
-    assert connected
+    d2, connected2 = quotient_diameter_minplus(q)
+    assert connected and connected2
     assert d1 == d2
 
 
