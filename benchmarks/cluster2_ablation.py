@@ -7,17 +7,18 @@ import time
 
 from benchmarks.common import benchmark_graphs, emit, true_diameter
 from repro.config.base import GraphEngineConfig
-from repro.core import approximate_diameter
+from repro.core import ClusterQuotientEstimator, open_session
 
 
 def run(scale: float = 0.5):
     rows = []
     for name, g in benchmark_graphs(scale).items():
         phi = true_diameter(g)
+        # one resident session; the algorithms are per-query overrides
+        sess = open_session(g, GraphEngineConfig(tau_fraction=2e-2))
         for use2 in (False, True):
-            cfg = GraphEngineConfig(use_cluster2=use2, tau_fraction=2e-2)
             t0 = time.perf_counter()
-            est = approximate_diameter(g, cfg)
+            est = sess.estimate(ClusterQuotientEstimator(use_cluster2=use2))
             rows.append({
                 "graph": name, "algo": "CLUSTER2" if use2 else "CLUSTER",
                 "ratio": round(est.phi_approx / max(phi, 1), 3),
@@ -25,6 +26,7 @@ def run(scale: float = 0.5):
                 "clusters": est.n_clusters,
                 "seconds": round(time.perf_counter() - t0, 2),
             })
+        sess.close()
     emit("cluster2_ablation", rows)
     return rows
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit, true_diameter
 from repro.config.base import GraphEngineConfig
-from repro.core import approximate_diameter
+from repro.core import ClusterQuotientEstimator, open_session
 from repro.graph import grid_mesh
 
 
@@ -17,9 +17,11 @@ def run(side: int = 128):
     g = grid_mesh(side, "bimodal", heavy_w=10**6, heavy_p=0.1, seed=8)
     phi = true_diameter(g)
     rows = []
+    # one resident session; Delta_init is a per-query override
+    sess = open_session(g, GraphEngineConfig())
     for name, delta0 in [("min", "min"), ("avg", "avg"),
                          ("diameter", str(max(phi, 1)))]:
-        est = approximate_diameter(g, GraphEngineConfig(delta_init=delta0))
+        est = sess.estimate(ClusterQuotientEstimator(delta_init=delta0))
         rows.append({
             "delta_init": name, "phi_true": phi, "phi_approx": est.phi_approx,
             "ratio": round(est.phi_approx / max(phi, 1), 3),

@@ -6,26 +6,32 @@ gap narrows. Offline, wall time on one CPU is an imperfect proxy for a
 16-node Spark cluster, so we report BOTH wall time and the platform-
 independent ROUND count: growing steps (CLUSTER) vs Bellman-Ford supersteps
 (SSSP-BF). Rounds are exactly what Theorem 1 bounds.
+
+Both methods are ``DiameterEstimator`` queries against ONE resident
+``GraphSession`` per graph — the paper's Table-3 comparison as a first-class
+API call (the SSSP estimator reads the same device edge buffers the
+decomposition used, so the timing gap is pure algorithm, not upload skew).
 """
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import benchmark_graphs, emit, engine_config, true_diameter
-from repro.core import approximate_diameter, diameter_2approx_sssp
+from repro.core import ClusterQuotientEstimator, DeltaSteppingEstimator, open_session
 
 
 def run(scale: float = 1.0):
     rows = []
     for name, g in benchmark_graphs(scale).items():
         phi = true_diameter(g)
+        sess = open_session(g, engine_config(tau_fraction=2e-2))
 
         t0 = time.perf_counter()
-        est = approximate_diameter(g, engine_config(tau_fraction=2e-2))
+        est = sess.estimate(ClusterQuotientEstimator())
         t_cluster = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        lb, ub, supersteps, _connected = diameter_2approx_sssp(g, seed=7)
+        sssp = sess.estimate(DeltaSteppingEstimator(seed=7))
         t_sssp = time.perf_counter() - t0
 
         rows.append({
@@ -33,11 +39,13 @@ def run(scale: float = 1.0):
             "t_cluster_s": round(t_cluster, 2),
             "t_sssp_bf_s": round(t_sssp, 2),
             "rounds_cluster": est.growing_steps,
-            "rounds_sssp_bf": supersteps,
-            "round_speedup": round(supersteps / max(est.growing_steps, 1), 2),
+            "rounds_sssp_bf": sssp.growing_steps,
+            "round_speedup": round(
+                sssp.growing_steps / max(est.growing_steps, 1), 2),
             "eps_cluster": round(est.phi_approx / max(phi, 1), 3),
-            "eps_sssp_bf": round(ub / max(phi, 1), 3),
+            "eps_sssp_bf": round(sssp.phi_approx / max(phi, 1), 3),
         })
+        sess.close()
     emit("table3_vs_sssp", rows)
     road = [r for r in rows if "road" in r["graph"]][0]
     assert road["round_speedup"] > 2, "round advantage must hold on roads"

@@ -11,7 +11,7 @@ import numpy as np
 
 from benchmarks.common import emit, true_diameter
 from repro.config.base import GraphEngineConfig
-from repro.core import approximate_diameter
+from repro.core import ClusterQuotientEstimator, open_session
 from repro.graph import grid_mesh, random_geometric, social_like
 from repro.graph.generators import assign_weights
 from repro.graph.structures import EdgeList
@@ -40,8 +40,10 @@ def run(scale: float = 1.0, repeats: int = 3):
             for rep in range(repeats):
                 g = _with_weights(g0, sigma, seed=100 + rep)
                 phi = true_diameter(g)
-                est = approximate_diameter(
-                    g, GraphEngineConfig(seed=rep), tau=max(g.n_nodes // 256, 4))
+                est = open_session(
+                    g, GraphEngineConfig(seed=rep),
+                    tau=max(g.n_nodes // 256, 4),
+                ).estimate(ClusterQuotientEstimator())
                 ratios.append(est.phi_approx / max(phi, 1))
             rows.append({
                 "topology": tname, "sigma": sigma,

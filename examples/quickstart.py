@@ -10,7 +10,7 @@ import numpy as np
 from scipy.sparse.csgraph import shortest_path
 
 from repro.config.base import GraphEngineConfig
-from repro.core import approximate_diameter, cluster
+from repro.core import cluster, open_session
 from repro.graph import grid_mesh
 from repro.graph.structures import to_scipy_csr
 
@@ -23,8 +23,8 @@ dec = cluster(g, tau=32, variant="stop", seed=0)
 print(f"CLUSTER: {dec.n_clusters} clusters, radius {dec.radius}, "
       f"{dec.growing_steps} Delta-growing steps ({dec.n_stages} stages)")
 
-# diameter from the quotient graph
-est = approximate_diameter(g, GraphEngineConfig())
+# diameter from the quotient graph (open the graph once, then query)
+est = open_session(g, GraphEngineConfig()).estimate()
 true_phi = int(shortest_path(to_scipy_csr(g), method="D", directed=False).max())
 print(f"Phi_approx = {est.phi_approx}  vs true {true_phi}  "
       f"(ratio {est.phi_approx / true_phi:.3f}, conservative: "

@@ -1,6 +1,7 @@
 """Shared low-level utilities: dtypes, padding, timing, logging, jax shims."""
 from repro.common.compat import shard_map
 from repro.common.util import (
+    bench_engine_path,
     ceil_div,
     pad_to_multiple,
     pad_axis_to,
@@ -13,6 +14,7 @@ from repro.common.util import (
 
 __all__ = [
     "shard_map",
+    "bench_engine_path",
     "ceil_div",
     "pad_to_multiple",
     "pad_axis_to",

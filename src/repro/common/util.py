@@ -58,6 +58,16 @@ def tree_num_params(tree: Any) -> int:
     return sum(int(np.prod(getattr(l, "shape", ()), dtype=np.int64)) for l in leaves)
 
 
+def bench_engine_path() -> str:
+    """Repo-root ``BENCH_engine.json`` — the ONE location the engine bench
+    writes and the serve sync-budget check reads (both must agree)."""
+    import os
+
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, "BENCH_engine.json")
+
+
 class Timer:
     """Context-manager wall timer. ``with Timer() as t: ...; t.seconds``."""
 

@@ -20,12 +20,27 @@ from repro.core.quotient import (
     DeviceQuotient,
     QuotientGraph,
 )
+from repro.core.session import (
+    EDGE_BUCKET,
+    GraphSession,
+    SessionMetrics,
+    SessionPool,
+    open_session,
+    tau_for,
+)
+from repro.core.estimators import (
+    ClusterQuotientEstimator,
+    DeltaSteppingEstimator,
+    DiameterEstimate,
+    DiameterEstimator,
+    DiameterInterval,
+    IntervalEstimator,
+    LowerBoundEstimator,
+    PipelineMetrics,
+)
 from repro.core.diameter import (
     approximate_diameter,
     approximate_diameter_batch,
-    DiameterEstimate,
-    PipelineMetrics,
-    tau_for,
 )
 from repro.core.sssp import (
     bellman_ford,
@@ -63,11 +78,22 @@ __all__ = [
     "quotient_diameter_minplus",
     "DeviceQuotient",
     "QuotientGraph",
+    "EDGE_BUCKET",
+    "GraphSession",
+    "SessionMetrics",
+    "SessionPool",
+    "open_session",
+    "tau_for",
+    "ClusterQuotientEstimator",
+    "DeltaSteppingEstimator",
+    "DiameterEstimator",
+    "DiameterInterval",
+    "IntervalEstimator",
+    "LowerBoundEstimator",
     "approximate_diameter",
     "approximate_diameter_batch",
     "DiameterEstimate",
     "PipelineMetrics",
-    "tau_for",
     "bellman_ford",
     "delta_stepping",
     "diameter_2approx_sssp",

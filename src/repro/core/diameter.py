@@ -1,123 +1,50 @@
-"""End-to-end diameter approximation (paper Section 4 + Section 5 pipeline).
+"""DEPRECATED one-shot entry points, kept as thin wrappers over the
+session API (``core/session.py`` + ``core/estimators.py``).
 
-Phi_approx(G) = Phi(G_C) + 2 * R, where G_C is the quotient of the
-decomposition and R its radius. Conservative: Phi_approx >= Phi(G).
-Defaults follow the paper's experimental choices: CLUSTER (not CLUSTER2),
-"stop" variant, Delta_init = average edge weight, tau ~ n/1000 quotient size.
+``approximate_diameter(edges, cfg)`` opens a throwaway ``GraphSession`` and
+runs ``ClusterQuotientEstimator`` — paying the full open cost (edge upload,
+backend build) on every call. For repeated queries, method comparisons, or
+many graphs, use the resident-graph API instead:
 
-The whole pipeline — decompose -> quotient -> local solve — is device
-resident: the decomposition engine costs one host sync per stage plus one
-packed finalize fetch, the quotient is one jitted segment-ops pass over the
-backend's device edge arrays (zero syncs), and the solve is a batched
-multi-source Bellman-Ford whose packed result is the last fetch.
-``PipelineMetrics`` accounts for every device->host synchronization;
-``benchmarks/kernel_bench.py`` records it in BENCH_engine.json and asserts
-the budget (<= 8 on the bench graph).
+    from repro.core import open_session, ClusterQuotientEstimator
+    sess = open_session(edges, cfg)          # upload + build ONCE
+    est = sess.estimate()                    # paper pipeline
+    est2 = sess.estimate(ClusterQuotientEstimator(variant="complete"))
 
-``approximate_diameter_batch`` runs many graphs through ONE compiled
-pipeline: graphs sharing a node count are padded to a common edge-array
-bucket (inert self-loops), so the stage program, quotient kernel and solve
-compile once per bucket instead of once per graph — the serving scenario.
+    from repro.core import SessionPool
+    with SessionPool(cfg) as pool:           # many same-shaped graphs,
+        ests = pool.estimate_many(graphs)    # one shared compile per bucket
+
+Both wrappers emit ``DeprecationWarning`` and produce field-identical
+``DiameterEstimate``s to the session path (asserted by
+``tests/test_session.py``). ``PipelineMetrics`` / ``DiameterEstimate`` /
+``tau_for`` / ``EDGE_BUCKET`` re-exports keep old import sites working.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from dataclasses import dataclass
+import warnings
 from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.common import Timer, get_logger, next_multiple
 from repro.config.base import GraphEngineConfig
-from repro.core.backend import make_backend
-from repro.core.cluster import Decomposition, _initial_delta, cluster, cluster2
-from repro.core.quotient import (
-    build_quotient_device,
-    build_quotient_numpy,
-    quotient_diameter,
-    solve_device_quotient,
+from repro.core.estimators import (  # noqa: F401  (re-exported)
+    ClusterQuotientEstimator,
+    DiameterEstimate,
+    PipelineMetrics,
+)
+from repro.core.session import (  # noqa: F401  (re-exported)
+    EDGE_BUCKET,
+    GraphSession,
+    SessionPool,
+    _pad_edges,
+    tau_for,
 )
 from repro.graph.structures import EdgeList
 
-log = get_logger("repro.diameter")
-
-EDGE_BUCKET = 256  # batch mode pads edge arrays to a multiple of this
-
-
-@dataclass
-class PipelineMetrics:
-    """Host-sync accounting for one approximate_diameter call.
-
-    Every field counts device->host fetches (the paper's round-overhead
-    analogue); device supersteps are tracked separately. The end-to-end
-    budget the bench asserts is ``total_host_syncs <= 8``.
-    """
-
-    decompose_syncs: int = 0   # one per engine stage (stop-decision scalars)
-    finalize_syncs: int = 0    # packed final-plane fetch (1 per decomposition)
-    quotient_syncs: int = 0    # (n_clusters, n_edges) scalar fetch
-    solve_syncs: int = 0       # packed (diameter, connected, steps, ecc) fetch
-    solve_supersteps: int = 0  # device BF supersteps inside the solve
-    n_quotient_edges: int = 0
-
-    @property
-    def total_host_syncs(self) -> int:
-        return (self.decompose_syncs + self.finalize_syncs
-                + self.quotient_syncs + self.solve_syncs)
-
-
-@dataclass
-class DiameterEstimate:
-    phi_approx: int
-    phi_quotient: int
-    radius: int
-    n_clusters: int
-    growing_steps: int
-    n_stages: int
-    delta_end: int
-    seconds: float
-    connected: bool
-    # phi_approx is a conservative estimate of the diameter ONLY when
-    # ``connected`` — for a disconnected graph it upper-bounds the largest
-    # finite-distance pair (the true diameter is infinite).
-    pipeline: Optional[PipelineMetrics] = None
-    quotient_ecc: Optional[np.ndarray] = None  # int64 [n_clusters]
-
-
-def tau_for(n_nodes: int, fraction: float = 1e-3, minimum: int = 4) -> int:
-    """Paper Section 5: pick tau so the quotient has ~ n/1000 nodes. CLUSTER
-    yields O(tau log^2 n) clusters; in practice ~ tau * small-constant, so we
-    take tau = n * fraction / log(n) with a floor."""
-    logn = max(math.log(max(n_nodes, 2)), 1.0)
-    return max(int(n_nodes * fraction / logn), minimum)
-
-
-def _device_quotient_solve(edges: EdgeList, dec: Decomposition, backend,
-                           pm: PipelineMetrics):
-    """quotient + local solve, device-resident. Returns
-    (phi_quotient, eccentricities, connected)."""
-    import jax.numpy as jnp
-
-    from jax.experimental import enable_x64
-
-    dq = build_quotient_device(edges, dec, backend=backend)
-    if dq is None:  # no nodes or no edges: quotient is trivially empty
-        k = dec.n_clusters
-        return 0, np.zeros(k, np.int64), k <= 1
-    with enable_x64():  # ONE packed fetch of the three device counters
-        kmw = np.asarray(jnp.stack([
-            dq.n_clusters.astype(jnp.int64), dq.n_edges.astype(jnp.int64),
-            dq.max_weight]))
-    pm.quotient_syncs += 1
-    k, m, wmax = int(kmw[0]), int(kmw[1]), int(kmw[2])
-    pm.n_quotient_edges = m
-    if k <= 1:
-        return 0, np.zeros(k, np.int64), True
-    diam, ecc, connected, steps = solve_device_quotient(dq, k, m, wmax)
-    pm.solve_syncs += 1
-    pm.solve_supersteps = steps
-    return diam, ecc, connected
+_DEPRECATION = (
+    "{name}() is deprecated: it rebuilds the backend and re-uploads the edge "
+    "arrays on every call. Use repro.core.open_session(...) + a "
+    "DiameterEstimator (or SessionPool for many graphs) instead."
+)
 
 
 def approximate_diameter(
@@ -127,92 +54,12 @@ def approximate_diameter(
     relax_fn=None,
     solver: str = "device",
 ) -> DiameterEstimate:
-    """Paper pipeline. ``relax_fn`` (a RelaxBackend) overrides the backend
-    selected by ``cfg.backend``; for a disconnected input the estimate covers
-    only finite-distance pairs and ``connected`` is False.
-
-    ``solver="device"`` (default) runs the quotient + solve on device;
-    ``solver="scipy"`` keeps the host oracle path (tests / debugging).
-    """
-    cfg = cfg or GraphEngineConfig()
-    tau = tau or tau_for(edges.n_nodes, cfg.tau_fraction)
-    backend = relax_fn if relax_fn is not None else make_backend(
-        edges, cfg.backend, comm=cfg.comm, impl=cfg.relax_impl)
-    pm = PipelineMetrics()
-    ecc = None
-    with Timer() as t:
-        if cfg.use_cluster2:
-            dec: Decomposition = cluster2(
-                edges, tau, gamma=cfg.gamma, seed=cfg.seed,
-                delta_init=cfg.delta_init, relax_fn=backend,
-            )
-        else:
-            dec = cluster(
-                edges, tau, gamma=cfg.gamma, variant=cfg.variant,
-                delta_init=cfg.delta_init, seed=cfg.seed,
-                max_stages=cfg.max_stages,
-                max_steps_per_phase=cfg.max_steps_per_phase,
-                relax_fn=backend,
-            )
-        if dec.metrics is not None:
-            pm.decompose_syncs = dec.metrics.host_syncs
-            pm.finalize_syncs = dec.metrics.finalize_syncs
-        if solver == "scipy":
-            q = build_quotient_numpy(edges, dec)
-            phi_q, connected = quotient_diameter(q)
-        else:
-            phi_q, ecc, connected = _device_quotient_solve(
-                edges, dec, backend, pm)
-        phi = phi_q + 2 * dec.radius
-        if not connected:
-            log.warning(
-                "graph is disconnected: phi_approx=%d only bounds "
-                "finite-distance pairs", phi)
-    log.info(
-        "phi_approx=%d (quotient=%d radius=%d clusters=%d steps=%d "
-        "host_syncs=%d) in %.2fs",
-        phi, phi_q, dec.radius, dec.n_clusters, dec.growing_steps,
-        pm.total_host_syncs, t.seconds,
-    )
-    return DiameterEstimate(
-        phi_approx=phi,
-        phi_quotient=phi_q,
-        radius=dec.radius,
-        n_clusters=dec.n_clusters,
-        growing_steps=dec.growing_steps,
-        n_stages=dec.n_stages,
-        delta_end=dec.delta_end,
-        seconds=t.seconds,
-        connected=connected,
-        pipeline=pm,
-        quotient_ecc=ecc,
-    )
-
-
-# ---------------------------------------------------------------------------
-# batched multi-graph entry point (serving scenario)
-# ---------------------------------------------------------------------------
-
-
-def _pad_edges(edges: EdgeList, e_pad: int) -> EdgeList:
-    """Pad the edge arrays to ``e_pad`` with inert self-loops (0 -> 0, w=1).
-
-    A self-loop never wins a relaxation (d[0] + 1 >= d[0]) and is never a
-    cross edge in the quotient, so the decomposition and estimate are the
-    same as on the unpadded graph — but all graphs in a bucket now share
-    one compiled pipeline.
-    """
-    e = edges.n_edges
-    if e_pad <= e:
-        return edges
-    pad = e_pad - e
-    z = np.zeros(pad, np.int32)
-    return EdgeList(
-        edges.n_nodes,
-        np.concatenate([edges.src, z]),
-        np.concatenate([edges.dst, z]),
-        np.concatenate([edges.weight, np.ones(pad, np.int32)]),
-    )
+    """Deprecated one-shot paper pipeline. ``relax_fn`` (a RelaxBackend)
+    overrides the backend selected by ``cfg.backend``."""
+    warnings.warn(_DEPRECATION.format(name="approximate_diameter"),
+                  DeprecationWarning, stacklevel=2)
+    sess = GraphSession(edges, cfg, tau=tau, backend=relax_fn)
+    return ClusterQuotientEstimator(solver=solver).estimate(sess)
 
 
 def approximate_diameter_batch(
@@ -220,28 +67,10 @@ def approximate_diameter_batch(
     cfg: Optional[GraphEngineConfig] = None,
     tau: Optional[int] = None,
 ) -> List[DiameterEstimate]:
-    """Run the pipeline over many graphs, amortizing compilation.
-
-    Graphs are grouped by node count; within a group the edge arrays are
-    padded to one bucketed size, so the jitted stage program, quotient
-    kernel and solve are compiled once per group and reused (the jit caches
-    key on shapes + static config, not on backend instances). Delta_init is
-    resolved from each graph's REAL edges before padding, so estimates match
-    the one-graph entry point exactly.
-    """
-    cfg = cfg or GraphEngineConfig()
-    results: List[Optional[DiameterEstimate]] = [None] * len(graphs)
-    by_n = {}
-    for i, g in enumerate(graphs):
-        by_n.setdefault(g.n_nodes, []).append(i)
-    for n, idxs in by_n.items():
-        e_pad = next_multiple(
-            max(graphs[i].n_edges for i in idxs) or 1, EDGE_BUCKET)
-        group_tau = tau or tau_for(n, cfg.tau_fraction)
-        for i in idxs:
-            g = graphs[i]
-            delta0 = _initial_delta(g, cfg.delta_init)
-            gcfg = dataclasses.replace(cfg, delta_init=str(delta0))
-            results[i] = approximate_diameter(
-                _pad_edges(g, e_pad), gcfg, tau=group_tau)
-    return results  # type: ignore[return-value]
+    """Deprecated batch entry point; delegates to ``SessionPool`` (same
+    node-count grouping, same edge-pad buckets, same per-graph delta_init
+    resolution — estimates are field-identical to the old loop)."""
+    warnings.warn(_DEPRECATION.format(name="approximate_diameter_batch"),
+                  DeprecationWarning, stacklevel=2)
+    with SessionPool(cfg) as pool:
+        return pool.estimate_many(graphs, tau=tau)

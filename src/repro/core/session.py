@@ -1,0 +1,329 @@
+"""GraphSession: a resident-graph handle for query-many serving.
+
+The paper's serving story is many diameter queries over massive graphs; the
+one-shot entry points (``approximate_diameter(edges, cfg)``) paid the full
+open cost on every call — a fresh ``RelaxBackend`` (edge re-upload plus, for
+the Pallas backend, a host re-blocking pass) and a cold jit-cache walk.
+``GraphSession`` splits that into open-once / query-many:
+
+  * ``open_session(edges, cfg)`` uploads the edge buffers, constructs the
+    backend and packs the padded node planes EXACTLY once; every estimator
+    query afterwards runs against the resident device buffers
+    (``session.backend`` for the decomposition/quotient path,
+    ``session.flat_device_edges()`` for the SSSP estimators) with zero
+    re-upload and zero backend rebuild.
+  * Compiled programs are shared across sessions automatically: every jitted
+    stage keys on (shape bucket, static config) — see ``GrowSpec`` — so two
+    sessions over same-shaped graphs hit one compile.
+  * ``SessionPool`` manages bucketed sessions for MANY same-shaped graphs:
+    edge arrays are padded to a common bucket with inert self-loops
+    (subsuming the old ``approximate_diameter_batch`` internals), so a whole
+    group of graphs shares one compiled pipeline.
+
+``SessionMetrics`` counts the expensive events (backend builds, edge-array
+uploads) so the serving bench can ASSERT the warm path does neither
+(recorded in ``BENCH_engine.json`` by ``benchmarks/kernel_bench.py``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.common import get_logger, next_multiple
+from repro.config.base import GraphEngineConfig
+from repro.core.backend import RelaxBackend, make_backend
+from repro.core.cluster import _initial_delta
+from repro.graph.structures import EdgeList
+
+log = get_logger("repro.session")
+
+EDGE_BUCKET = 256  # pooled sessions pad edge arrays to a multiple of this
+
+
+def tau_for(n_nodes: int, fraction: float = 1e-3, minimum: int = 4) -> int:
+    """Paper Section 5: pick tau so the quotient has ~ n/1000 nodes. CLUSTER
+    yields O(tau log^2 n) clusters; in practice ~ tau * small-constant, so we
+    take tau = n * fraction / log(n) with a floor."""
+    logn = max(math.log(max(n_nodes, 2)), 1.0)
+    return max(int(n_nodes * fraction / logn), minimum)
+
+
+@dataclass
+class SessionMetrics:
+    """Open-vs-query cost accounting, shared across a pool's sessions.
+
+    ``backend_builds`` / ``edge_uploads`` count the expensive open-path
+    events; a query that triggers neither is WARM. The serving bench asserts
+    warm queries stay at zero builds and zero uploads.
+    """
+
+    sessions_opened: int = 0
+    backend_builds: int = 0   # RelaxBackend constructions (edge layout + jit keys)
+    edge_uploads: int = 0     # host->device edge-array placements
+    queries: int = 0          # estimator runs against a session
+    warm_queries: int = 0     # queries that triggered no build and no upload
+
+
+class GraphSession:
+    """One resident graph: edges on device, backend built, ready to query.
+
+    ``estimate(estimator)`` runs any ``DiameterEstimator`` against the
+    resident handle; with no argument it runs the paper pipeline
+    (``ClusterQuotientEstimator``). Usable as a context manager; ``close()``
+    drops the device buffers.
+    """
+
+    def __init__(
+        self,
+        edges: EdgeList,
+        cfg: Optional[GraphEngineConfig] = None,
+        *,
+        tau: Optional[int] = None,
+        backend: Optional[RelaxBackend] = None,
+        metrics: Optional[SessionMetrics] = None,
+        delta_stats: Optional[Dict[str, int]] = None,
+    ):
+        if tau is not None and tau < 1:
+            raise ValueError(f"tau must be >= 1, got {tau}")
+        self.edges: Optional[EdgeList] = edges
+        self._n_nodes = edges.n_nodes
+        self._n_edges = edges.n_edges
+        # symbolic Delta_init modes pre-resolved over the REAL edges — set
+        # by SessionPool so padding self-loops never skew "avg"/"min"
+        self._delta_stats = delta_stats
+        self.cfg = cfg or GraphEngineConfig()
+        self.metrics = metrics if metrics is not None else SessionMetrics()
+        self.metrics.sessions_opened += 1
+        if backend is None:
+            backend = make_backend(edges, self.cfg.backend, comm=self.cfg.comm,
+                                   impl=self.cfg.relax_impl)
+        # a prebuilt backend counts too: its construction and edge upload
+        # are this session's open cost (they happened, just outside) — the
+        # warm-query contract must account for them either way
+        self.metrics.backend_builds += 1
+        self.metrics.edge_uploads += 1
+        self.backend: Optional[RelaxBackend] = backend
+        self.tau = tau if tau is not None else tau_for(
+            edges.n_nodes, self.cfg.tau_fraction)
+        self._flat_edges: Optional[Tuple] = None
+        self._closed = False
+        log.debug("opened session: %d nodes, %d edges, tau=%d, backend=%s",
+                  edges.n_nodes, edges.n_edges, self.tau,
+                  getattr(self.backend, "kind", "custom"))
+
+    # -- resident buffers ---------------------------------------------------
+
+    @property
+    def n_nodes(self) -> int:
+        return self._n_nodes
+
+    @property
+    def n_edges(self) -> int:
+        return self._n_edges
+
+    def resolve_delta_init(self, mode: str) -> int:
+        """Resolve a symbolic Delta_init ("avg" | "min" | numeric) for this
+        graph. Pooled sessions resolve over the REAL (pre-padding) edge
+        stats, so per-query overrides match an unpooled session exactly."""
+        self._check_open()
+        if self._delta_stats is not None and mode in self._delta_stats:
+            return self._delta_stats[mode]
+        return _initial_delta(self.edges, mode)
+
+    def flat_device_edges(self):
+        """Flat device ``(src, dst, weight)`` arrays for the SSSP estimators.
+
+        The single-device backend's own buffers are reused directly; other
+        backends hold blocked/sharded layouts with phantom endpoints, so the
+        flat view is uploaded ONCE on first use and cached for the session's
+        lifetime (counted as one ``edge_uploads``).
+        """
+        self._check_open()
+        import jax.numpy as jnp
+
+        if self._flat_edges is None:
+            be = self.backend
+            if getattr(be, "kind", None) == "single":
+                self._flat_edges = (be.src, be.dst, be.weight)
+            else:
+                self._flat_edges = (jnp.asarray(self.edges.src),
+                                    jnp.asarray(self.edges.dst),
+                                    jnp.asarray(self.edges.weight))
+                self.metrics.edge_uploads += 1
+        return self._flat_edges
+
+    # -- querying -----------------------------------------------------------
+
+    def estimate(self, estimator=None):
+        """Run ``estimator`` (default: the paper pipeline) on this session."""
+        self._check_open()
+        if estimator is None:
+            from repro.core.estimators import ClusterQuotientEstimator
+
+            estimator = ClusterQuotientEstimator()
+        return estimator.estimate(self)
+
+    @contextlib.contextmanager
+    def track_query(self):
+        """Estimator-side hook: counts the query and classifies it warm when
+        it triggered no backend build and no edge upload."""
+        self._check_open()
+        m = self.metrics
+        b0, u0 = m.backend_builds, m.edge_uploads
+        m.queries += 1
+        yield
+        if m.backend_builds == b0 and m.edge_uploads == u0:
+            m.warm_queries += 1
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _check_open(self):
+        if self._closed:
+            raise RuntimeError("session is closed")
+
+    def close(self):
+        """Release the graph buffers: the device-side backend and flat
+        views AND the host edge arrays (only the scalar shape/config
+        survives, so a closed session costs nothing to keep around)."""
+        self.backend = None
+        self._flat_edges = None
+        self.edges = None
+        self._closed = True
+
+    def __enter__(self) -> "GraphSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def open_session(
+    edges: EdgeList,
+    cfg: Optional[GraphEngineConfig] = None,
+    *,
+    tau: Optional[int] = None,
+    backend: Optional[RelaxBackend] = None,
+    metrics: Optional[SessionMetrics] = None,
+) -> GraphSession:
+    """Open a graph once for many queries. ``backend`` passes a prebuilt
+    ``RelaxBackend`` through (e.g. ``DistributedEngine.make_relax_fn()``);
+    otherwise one is constructed from ``cfg.backend``."""
+    return GraphSession(edges, cfg, tau=tau, backend=backend, metrics=metrics)
+
+
+# ---------------------------------------------------------------------------
+# bucketed padding (shared-compile serving)
+# ---------------------------------------------------------------------------
+
+
+def _pad_edges(edges: EdgeList, e_pad: int) -> EdgeList:
+    """Pad the edge arrays to ``e_pad`` with inert self-loops (0 -> 0, w=1).
+
+    A self-loop never wins a relaxation (d[0] + 1 >= d[0]) and is never a
+    cross edge in the quotient, so the decomposition and estimate are the
+    same as on the unpadded graph — but all graphs in a bucket now share
+    one compiled pipeline.
+    """
+    e = edges.n_edges
+    if e_pad <= e:
+        return edges
+    pad = e_pad - e
+    z = np.zeros(pad, np.int32)
+    return EdgeList(
+        edges.n_nodes,
+        np.concatenate([edges.src, z]),
+        np.concatenate([edges.dst, z]),
+        np.concatenate([edges.weight, np.ones(pad, np.int32)]),
+    )
+
+
+class SessionPool:
+    """Bucketed sessions over many same-shaped graphs, one shared compile.
+
+    ``open(edges)`` pads the edge arrays to a bucket multiple (inert
+    self-loops) and resolves ``delta_init`` from the REAL edges first, so
+    estimates match an unpooled session exactly while every same-bucket
+    session shares the jitted stage/quotient/solve programs.
+    ``estimate_many(graphs)`` reproduces the old batch entry point's
+    grouping (by node count, padded to the group maximum).
+
+    All sessions share one ``SessionMetrics``, so the pool can answer "did
+    any warm query rebuild a backend or re-upload edges?" with a counter.
+    """
+
+    def __init__(self, cfg: Optional[GraphEngineConfig] = None,
+                 edge_bucket: int = EDGE_BUCKET):
+        self.cfg = cfg or GraphEngineConfig()
+        self.edge_bucket = edge_bucket
+        self.metrics = SessionMetrics()
+        self.sessions: List[GraphSession] = []
+
+    def _make_session(self, edges: EdgeList, tau: Optional[int],
+                      e_pad: Optional[int]) -> GraphSession:
+        # two cheap reductions over the real weights cover both symbolic
+        # modes AND the config's own delta_init; they must run BEFORE
+        # padding (inert w=1 self-loops would skew avg/min) and cost noise
+        # next to one decomposition
+        stats = {"avg": _initial_delta(edges, "avg"),
+                 "min": _initial_delta(edges, "min")}
+        delta0 = stats.get(self.cfg.delta_init)
+        if delta0 is None:
+            delta0 = _initial_delta(edges, self.cfg.delta_init)
+        gcfg = dataclasses.replace(self.cfg, delta_init=str(delta0))
+        e_pad = e_pad or next_multiple(max(edges.n_edges, 1), self.edge_bucket)
+        return GraphSession(_pad_edges(edges, e_pad), gcfg, tau=tau,
+                            metrics=self.metrics, delta_stats=stats)
+
+    def open(self, edges: EdgeList, *, tau: Optional[int] = None,
+             e_pad: Optional[int] = None) -> GraphSession:
+        """Open a RESIDENT session (tracked until ``pool.close()``)."""
+        sess = self._make_session(edges, tau, e_pad)
+        self.sessions.append(sess)
+        return sess
+
+    def estimate_many(self, graphs: Sequence[EdgeList], estimator=None,
+                      tau: Optional[int] = None) -> List:
+        """Open + query every graph, grouped by node count so each group is
+        padded to ONE bucketed edge size and shares one compiled pipeline.
+
+        One-shot: each session is closed (buffers dropped) right after its
+        query and never registered with the pool, so memory stays at ONE
+        graph's buffers no matter how many graphs stream through — the
+        compiled programs, the expensive part, outlive the sessions in the
+        jit cache. Keep sessions resident via ``pool.open()`` when serving
+        repeat queries.
+        """
+        if tau is not None and tau < 1:
+            raise ValueError(f"tau must be >= 1, got {tau}")
+        results: List = [None] * len(graphs)
+        by_n: Dict[int, List[int]] = {}
+        for i, g in enumerate(graphs):
+            by_n.setdefault(g.n_nodes, []).append(i)
+        for n, idxs in by_n.items():
+            e_pad = next_multiple(
+                max(graphs[i].n_edges for i in idxs) or 1, self.edge_bucket)
+            group_tau = tau if tau is not None else tau_for(
+                n, self.cfg.tau_fraction)
+            for i in idxs:
+                sess = self._make_session(graphs[i], group_tau, e_pad)
+                try:
+                    results[i] = sess.estimate(estimator)
+                finally:
+                    sess.close()
+        return results
+
+    def close(self):
+        for s in self.sessions:
+            s.close()
+        self.sessions.clear()
+
+    def __enter__(self) -> "SessionPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,11 +1,14 @@
-"""Graph-analytics launcher: the paper's diameter-approximation pipeline.
+"""Graph-analytics launcher: the paper's diameter-approximation pipeline on
+a resident ``GraphSession`` (open once, query with any estimator).
 
   PYTHONPATH=src python -m repro.launch.diameter --graph road --n 20000 \
       [--variant stop] [--delta-init avg] [--tau 16] \
       [--backend single|sharded|pallas] [--comm halo] [--partition cluster] \
-      [--compare-sssp]
+      [--compare-sssp] [--interval]
 
-``--distributed`` is kept as an alias for ``--backend sharded``.
+``--compare-sssp`` and ``--interval`` run the competitor estimators against
+the SAME session — no re-upload between methods. ``--distributed`` is kept
+as an alias for ``--backend sharded``.
 """
 from __future__ import annotations
 
@@ -15,13 +18,32 @@ import jax
 
 from repro.common import get_logger
 from repro.config.base import GraphEngineConfig
-from repro.core import approximate_diameter, cluster, diameter_2approx_sssp
+from repro.core import (
+    ClusterQuotientEstimator,
+    DeltaSteppingEstimator,
+    IntervalEstimator,
+    cluster,
+    open_session,
+)
 from repro.core.distributed import DistributedEngine
 from repro.graph import grid_mesh, random_geometric, social_like
 from repro.graph.partition import apply_partition, partition_for_backend
 from repro.launch.mesh import host_device_mesh
 
 log = get_logger("repro.diameter")
+
+
+def add_tau_argument(ap: argparse.ArgumentParser) -> None:
+    """The shared --tau CLI contract (also used by launch/serve.py)."""
+    ap.add_argument("--tau", type=int, default=None,
+                    help="decomposition tau (>= 1); default: the paper's "
+                         "n/1000 rule via tau_for()")
+
+
+def validate_tau(ap: argparse.ArgumentParser, tau) -> None:
+    if tau is not None and tau < 1:
+        ap.error(f"--tau must be >= 1 (got {tau}); omit it to use the "
+                 "paper's n/1000 default")
 
 
 def build_graph(kind: str, n: int, seed: int):
@@ -41,7 +63,7 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="road", choices=["road", "social", "mesh"])
     ap.add_argument("--n", type=int, default=10_000)
-    ap.add_argument("--tau", type=int, default=0)
+    add_tau_argument(ap)
     ap.add_argument("--variant", default="stop", choices=["stop", "complete"])
     ap.add_argument("--delta-init", default="avg")
     ap.add_argument("--cluster2", action="store_true")
@@ -54,8 +76,12 @@ def main() -> int:
                     help="sharded backend node relabeling (cluster = "
                          "locality-aware, from a pilot decomposition)")
     ap.add_argument("--compare-sssp", action="store_true")
+    ap.add_argument("--interval", action="store_true",
+                    help="run the full estimator panel and report the "
+                         "certified [lower, upper] bracket")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    validate_tau(ap, args.tau)
     backend_kind = "sharded" if args.distributed else args.backend
 
     g = build_graph(args.graph, args.n, args.seed)
@@ -64,7 +90,7 @@ def main() -> int:
                             use_cluster2=args.cluster2, seed=args.seed,
                             backend=backend_kind, comm=args.comm)
 
-    relax_fn = None
+    backend = None
     if backend_kind == "sharded":
         mesh = host_device_mesh()
         if args.partition == "cluster":
@@ -75,12 +101,13 @@ def main() -> int:
             g, _ = apply_partition(g, perm)
             log.info("cluster partition applied over %d devices", n_dev)
         eng = DistributedEngine(g, mesh, comm=args.comm)
-        relax_fn = eng.make_relax_fn()
+        backend = eng.make_relax_fn()
         log.info("sharded backend on %s devices, comm=%s",
                  dict(mesh.shape), args.comm)
-    # single/pallas: approximate_diameter builds the backend from cfg.backend
+    # single/pallas: the session builds the backend from cfg.backend
 
-    est = approximate_diameter(g, cfg, tau=args.tau or None, relax_fn=relax_fn)
+    sess = open_session(g, cfg, tau=args.tau, backend=backend)
+    est = sess.estimate(ClusterQuotientEstimator())
     log.info("Phi_approx = %d  (quotient %d + 2 x radius %d)  "
              "clusters=%d stages=%d growing_steps=%d connected=%s  %.2fs",
              est.phi_approx, est.phi_quotient, est.radius, est.n_clusters,
@@ -94,11 +121,21 @@ def main() -> int:
                  pm.n_quotient_edges)
 
     if args.compare_sssp:
-        lb, ub, ss, conn = diameter_2approx_sssp(g, seed=args.seed)
-        log.info("SSSP-BF: lower=%d upper=%d supersteps=%d connected=%s  "
+        # same resident session: the competitor re-uses the device buffers
+        sssp = sess.estimate(DeltaSteppingEstimator(seed=args.seed))
+        # phi_approx (= 2 ecc) stays an int even when upper is dropped on
+        # disconnected inputs
+        log.info("SSSP-BF: lower=%d 2xecc=%d supersteps=%d connected=%s  "
                  "(CLUSTER rounds: %d -> %.1fx fewer)",
-                 lb, ub, ss, conn, est.growing_steps,
-                 ss / max(est.growing_steps, 1))
+                 sssp.lower, sssp.phi_approx, sssp.growing_steps,
+                 sssp.connected, est.growing_steps,
+                 sssp.growing_steps / max(est.growing_steps, 1))
+    if args.interval:
+        iv = sess.estimate(IntervalEstimator())
+        log.info("certified bracket: diameter in [%d, %d] connected=%s "
+                 "(merged host syncs=%d) %.2fs", iv.lower, iv.upper,
+                 iv.connected, iv.pipeline.total_host_syncs, iv.seconds)
+    log.info("session metrics: %s", sess.metrics)
     return 0
 
 

@@ -1,56 +1,153 @@
 """Batched serving driver: prefill + steady-state decode with a KV cache,
-plus a graph-analytics mode serving diameter queries over many small graphs
-through ONE compiled pipeline (``approximate_diameter_batch``).
+plus a graph-analytics mode serving diameter queries through resident
+``GraphSession``s — open each graph once, query many times with zero backend
+rebuilds and zero edge re-uploads (asserted via ``SessionMetrics``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --mode graph-diameter \
-      --batch 8 --graph-n 2000 [--graph road] [--tau 12]
+      --batch 8 --graph-n 2000 --queries 3 [--graph road] [--tau 12] \
+      [--estimator cluster|sssp|lower|interval] \
+      [--check-amortization 2.0] [--sync-budget bench]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common import get_logger
+from repro.common import bench_engine_path, get_logger
 from repro.config.registry import get_arch
 from repro.models import transformer as tf_mod
 
 log = get_logger("repro.serve")
 
+ESTIMATORS = ("cluster", "sssp", "lower", "interval")
+
+
+def _make_estimator(name: str):
+    from repro.core import (ClusterQuotientEstimator, DeltaSteppingEstimator,
+                            IntervalEstimator, LowerBoundEstimator)
+
+    return {"cluster": ClusterQuotientEstimator,
+            "sssp": DeltaSteppingEstimator,
+            "lower": LowerBoundEstimator,
+            "interval": IntervalEstimator}[name]()
+
+
+def _resolve_sync_budget(spec: str):
+    """"off" -> None (disabled), "bench" -> the recorded BENCH_engine.json
+    pipeline budget, anything else -> an explicit integer ceiling (0 is a
+    real ceiling — every host sync fails it — not "off")."""
+    if spec == "off":
+        return None
+    if spec == "bench":
+        with open(bench_engine_path()) as f:
+            return int(json.load(f)["pipeline"]["host_syncs_total"])
+    return int(spec)
+
+
+def _query_syncs(result) -> int:
+    """Host syncs to judge against the per-pipeline budget. For a composite
+    (DiameterInterval) the merged panel total would trivially exceed a
+    single-pipeline budget, so judge its WORST member instead — every
+    estimator in the panel must individually stay within budget."""
+    estimates = getattr(result, "estimates", None)
+    if estimates:
+        return max(_query_syncs(r) for r in estimates.values())
+    pm = getattr(result, "pipeline", None)
+    return pm.total_host_syncs if pm is not None else 0
+
 
 def serve_graph_diameter(args) -> int:
-    """Steady-state diameter serving: a batch of same-sized graphs shares
-    one compiled decompose->quotient->solve pipeline, so graph 2..N pay
-    only execution, not compilation (the serving win this mode measures)."""
+    """Steady-state diameter serving on resident sessions.
+
+    Every graph is opened ONCE into a ``SessionPool`` (all sessions share
+    one edge-pad bucket, hence one compiled pipeline); each session then
+    serves ``--queries`` queries. The first query of the first session pays
+    compilation; everything after streams warm. Exit status is non-zero
+    when ``--check-amortization`` / ``--sync-budget`` contracts are
+    violated, or when any warm query rebuilt a backend or re-uploaded edge
+    arrays (the ``SessionMetrics`` contract)."""
+    from repro.common import next_multiple
     from repro.config.base import GraphEngineConfig
-    from repro.core import approximate_diameter_batch
+    from repro.core import DiameterInterval, SessionPool
     from repro.launch.diameter import build_graph
 
     graphs = [build_graph(args.graph, args.graph_n, seed=s)
               for s in range(args.batch)]
     cfg = GraphEngineConfig(backend=args.backend)
-    # ONE batch call so every graph shares the same edge-pad bucket (two
-    # calls would pad to different group maxima and recompile); per-graph
-    # wall time comes from each estimate's own Timer.
-    ests = approximate_diameter_batch(graphs, cfg, tau=args.tau or None)
-    for i, est in enumerate(ests):
-        log.info("graph[%d]: phi=%d clusters=%d connected=%s host_syncs=%d "
-                 "%.3fs", i, est.phi_approx, est.n_clusters, est.connected,
-                 est.pipeline.total_host_syncs if est.pipeline else -1,
-                 est.seconds)
-    t_first = ests[0].seconds
-    warm = [e.seconds for e in ests[1:]]
-    per_warm = sum(warm) / max(len(warm), 1)
-    log.info("first graph %.2fs (compile), steady state %.3fs/graph "
-             "(%.1f graphs/s, %.1fx amortization)",
-             t_first, per_warm, 1.0 / max(per_warm, 1e-9),
-             t_first / max(per_warm, 1e-9))
-    return 0
+    estimator = _make_estimator(args.estimator)
+    sync_budget = _resolve_sync_budget(args.sync_budget)
+
+    pool = SessionPool(cfg)
+    # one shared edge-pad bucket across the whole batch (per-graph buckets
+    # would pad to different sizes and recompile)
+    e_pad = next_multiple(max(g.n_edges for g in graphs) or 1,
+                          pool.edge_bucket)
+    with pool:
+        sessions = [pool.open(g, tau=args.tau, e_pad=e_pad) for g in graphs]
+
+        worst_syncs, failures = 0, []
+        t0 = time.perf_counter()
+        cold: list[float] = []  # first query per session (session 0 compiles)
+        warm: list[float] = []
+        for round_idx in range(args.queries):
+            if round_idx == 1:
+                # the SessionMetrics contract: from here on, NOTHING may
+                # build a backend or upload an edge array
+                builds0 = pool.metrics.backend_builds
+                uploads0 = pool.metrics.edge_uploads
+            for i, sess in enumerate(sessions):
+                tq = time.perf_counter()
+                res = sess.estimate(estimator)
+                dt = time.perf_counter() - tq
+                (cold if round_idx == 0 else warm).append(dt)
+                worst_syncs = max(worst_syncs, _query_syncs(res))
+                if isinstance(res, DiameterInterval):
+                    log.info("graph[%d] q%d: diameter in [%d, %d] "
+                             "connected=%s host_syncs=%d %.3fs",
+                             i, round_idx, res.lower, res.upper,
+                             res.connected, _query_syncs(res), dt)
+                else:
+                    log.info("graph[%d] q%d: phi=%d clusters=%d connected=%s "
+                             "host_syncs=%d %.3fs", i, round_idx,
+                             res.phi_approx, res.n_clusters, res.connected,
+                             _query_syncs(res), dt)
+        total = time.perf_counter() - t0
+
+        m = pool.metrics
+        if args.queries > 1:
+            rebuilds = m.backend_builds - builds0
+            reuploads = m.edge_uploads - uploads0
+            log.info("warm path: %d backend rebuilds, %d edge re-uploads "
+                     "over %d warm queries", rebuilds, reuploads, len(warm))
+            if rebuilds or reuploads:
+                failures.append(
+                    f"warm queries must be resident: {rebuilds} rebuilds, "
+                    f"{reuploads} re-uploads")
+        t_cold = cold[0]
+        steady = (cold[1:] + warm) or [t_cold]
+        per_warm = sum(steady) / len(steady)
+        amort = t_cold / max(per_warm, 1e-9)
+        log.info("opened %d sessions; first query %.2fs (compile), steady "
+                 "state %.3fs/query (%.1f queries/s, %.1fx amortization), "
+                 "%.2fs total", len(sessions), t_cold, per_warm,
+                 1.0 / max(per_warm, 1e-9), amort, total)
+        log.info("session metrics: %s", m)
+        if args.check_amortization and amort < args.check_amortization:
+            failures.append(f"amortization {amort:.1f}x below required "
+                            f"{args.check_amortization:.1f}x")
+        if sync_budget is not None and worst_syncs > sync_budget:
+            failures.append(f"host syncs {worst_syncs} exceed the recorded "
+                            f"bench budget {sync_budget}")
+    for f in failures:
+        log.error("FAIL: %s", f)
+    return 1 if failures else 0
 
 
 def main() -> int:
@@ -65,11 +162,33 @@ def main() -> int:
     # graph-diameter mode
     ap.add_argument("--graph", default="road",
                     choices=["road", "social", "mesh"])
+    from repro.launch.diameter import add_tau_argument, validate_tau
+
     ap.add_argument("--graph-n", type=int, default=2000)
-    ap.add_argument("--tau", type=int, default=0)
+    add_tau_argument(ap)
     ap.add_argument("--backend", default="single",
                     choices=["single", "sharded", "pallas"])
+    ap.add_argument("--queries", type=int, default=2,
+                    help="diameter queries per resident session")
+    ap.add_argument("--estimator", default="cluster", choices=ESTIMATORS)
+    ap.add_argument("--check-amortization", type=float, default=0.0,
+                    help="fail unless cold/warm query amortization reaches "
+                         "this ratio (0 = off)")
+    ap.add_argument("--sync-budget", default="off",
+                    help="per-query host-sync ceiling: off | bench "
+                         "(use the recorded BENCH_engine.json value) | <int>")
     args = ap.parse_args()
+    validate_tau(ap, args.tau)
+    if args.queries < 1:
+        ap.error("--queries must be >= 1")
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
+    if args.sync_budget not in ("off", "bench"):
+        try:
+            int(args.sync_budget)
+        except ValueError:
+            ap.error(f"--sync-budget must be off | bench | <int> "
+                     f"(got {args.sync_budget!r})")
 
     if args.mode == "graph-diameter":
         return serve_graph_diameter(args)

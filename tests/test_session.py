@@ -1,0 +1,331 @@
+"""GraphSession / DiameterEstimator API: back-compat field-identity of the
+deprecated wrappers, the warm-query residency contract (SessionMetrics),
+PipelineMetrics aggregation, the estimator bound contract
+(lower <= exact <= upper with a consistent ``connected`` flag), and the
+certified IntervalEstimator bracket."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    ClusterQuotientEstimator,
+    DeltaSteppingEstimator,
+    DiameterEstimator,
+    IntervalEstimator,
+    LowerBoundEstimator,
+    PipelineMetrics,
+    SessionPool,
+    approximate_diameter,
+    approximate_diameter_batch,
+    diameter_2approx_sssp,
+    farthest_point_lower_bound,
+    open_session,
+)
+from repro.graph import grid_mesh, random_connected, random_geometric
+from repro.graph.structures import EdgeList, to_scipy_csr
+
+
+def _true_diameter(edges):
+    from scipy.sparse.csgraph import shortest_path
+    d = shortest_path(to_scipy_csr(edges), method="D", directed=False)
+    fin = d[np.isfinite(d)]
+    return int(fin.max()) if len(fin) else 0
+
+
+def _edgeless(n):
+    z = np.array([], dtype=np.int32)
+    return EdgeList(n, z, z, z)
+
+
+def _two_triangles():
+    u = np.array([0, 1, 2, 3, 4, 5], np.int32)
+    v = np.array([1, 2, 0, 4, 5, 3], np.int32)
+    return EdgeList.from_undirected(6, u, v, np.ones(6, np.int32))
+
+
+def _assert_estimates_identical(a, b, ignore=("seconds",)):
+    """Field-for-field identity of two DiameterEstimates (wall time aside)."""
+    for f in dataclasses.fields(a):
+        if f.name in ignore:
+            continue
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(x, np.ndarray) or isinstance(y, np.ndarray):
+            np.testing.assert_array_equal(x, y, err_msg=f.name)
+        else:
+            assert x == y, (f.name, x, y)
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrappers: delegate to sessions, warn, and stay field-identical
+# ---------------------------------------------------------------------------
+
+def test_wrapper_emits_deprecation_and_matches_session_path():
+    g = random_geometric(800, avg_degree=3.0, seed=5)
+    with pytest.deprecated_call():
+        old = approximate_diameter(g, tau=8)
+    new = open_session(g, tau=8).estimate(ClusterQuotientEstimator())
+    _assert_estimates_identical(old, new)
+
+
+def test_batch_wrapper_matches_pool_path():
+    graphs = [random_geometric(500, avg_degree=3.0, seed=s) for s in range(3)]
+    graphs.append(grid_mesh(10, "uniform", high=50, seed=1))  # second bucket
+    with pytest.deprecated_call():
+        old = approximate_diameter_batch(graphs, tau=6)
+    new = SessionPool().estimate_many(graphs, tau=6)
+    for a, b in zip(old, new):
+        _assert_estimates_identical(a, b)
+
+
+def test_wrapper_scipy_solver_still_works():
+    g = grid_mesh(12, "uniform", high=100, seed=2)
+    with pytest.deprecated_call():
+        dev = approximate_diameter(g, tau=6)
+    with pytest.deprecated_call():
+        ora = approximate_diameter(g, tau=6, solver="scipy")
+    assert dev.phi_approx == ora.phi_approx
+    assert dev.connected == ora.connected
+
+
+# ---------------------------------------------------------------------------
+# estimators match the legacy free functions on the same seed
+# ---------------------------------------------------------------------------
+
+def test_delta_stepping_estimator_matches_legacy_numbers():
+    g = random_geometric(700, avg_degree=3.0, seed=3)
+    sess = open_session(g)
+    est = sess.estimate(DeltaSteppingEstimator(seed=7))
+    lb, ub, supersteps, connected = diameter_2approx_sssp(g, seed=7)
+    assert (est.lower, est.upper, est.growing_steps, est.connected) == \
+        (lb, ub, supersteps, connected)
+    assert est.phi_approx == ub
+
+
+def test_lower_bound_estimator_matches_legacy_numbers():
+    g = random_geometric(700, avg_degree=3.0, seed=4)
+    sess = open_session(g)
+    est = sess.estimate(LowerBoundEstimator(rounds=4, seed=0))
+    lb, connected = farthest_point_lower_bound(g, rounds=4, seed=0)
+    assert (est.lower, est.connected) == (lb, connected)
+    # the first hop is the 2-approx SSSP (same source draw for seed=0), so
+    # its upper bound rides along for free
+    _, ub, _, _ = diameter_2approx_sssp(g, seed=0)
+    assert est.upper == ub
+
+
+def test_estimators_satisfy_protocol():
+    for e in (ClusterQuotientEstimator(), DeltaSteppingEstimator(),
+              LowerBoundEstimator(), IntervalEstimator()):
+        assert isinstance(e, DiameterEstimator)
+
+
+# ---------------------------------------------------------------------------
+# residency contract: warm queries build/upload nothing
+# ---------------------------------------------------------------------------
+
+def test_warm_queries_zero_rebuilds_zero_reuploads():
+    g = random_geometric(600, avg_degree=3.0, seed=6)
+    sess = open_session(g)
+    assert sess.metrics.backend_builds == 1
+    assert sess.metrics.edge_uploads == 1
+    for _ in range(3):
+        sess.estimate(ClusterQuotientEstimator())
+    sess.estimate(DeltaSteppingEstimator())  # single backend: reuses buffers
+    m = sess.metrics
+    assert m.backend_builds == 1, "warm queries must not rebuild the backend"
+    assert m.edge_uploads == 1, "warm queries must not re-upload edges"
+    assert m.queries == 4
+    assert m.warm_queries == 4
+
+
+def test_pool_shares_bucket_and_matches_unpooled():
+    graphs = [random_geometric(400, avg_degree=3.0, seed=s) for s in range(3)]
+    pool = SessionPool()
+    sessions = [pool.open(g, tau=8) for g in graphs]
+    # one bucket: every session's padded edge arrays share a compiled shape
+    assert len({s.n_edges for s in sessions}) == 1
+    for g, sess in zip(graphs, sessions):
+        pooled = sess.estimate(ClusterQuotientEstimator())
+        solo = open_session(g, tau=8).estimate(ClusterQuotientEstimator())
+        assert pooled.phi_approx == solo.phi_approx
+        assert pooled.n_clusters == solo.n_clusters
+        assert pooled.connected == solo.connected
+    assert pool.metrics.backend_builds == len(graphs)
+
+
+def test_pooled_delta_init_override_matches_unpooled():
+    """Regression: a per-query delta_init="avg" override on a POOLED session
+    must resolve over the real edges, not the padding self-loops (w=1),
+    which would drag the average down and change the decomposition."""
+    g = grid_mesh(8, "uniform", high=2000, seed=4)  # few edges, heavy avg
+    pooled = SessionPool().open(g, tau=4)
+    assert pooled.n_edges > g.n_edges  # padding actually happened
+    est_pool = pooled.estimate(ClusterQuotientEstimator(delta_init="avg"))
+    est_solo = open_session(g, tau=4).estimate(
+        ClusterQuotientEstimator(delta_init="avg"))
+    _assert_estimates_identical(est_pool, est_solo)
+
+
+def test_delta_stepping_rejects_nonpositive_delta():
+    sess = open_session(grid_mesh(4, "unit"))
+    with pytest.raises(ValueError, match="delta"):
+        sess.estimate(DeltaSteppingEstimator(delta=0))
+
+
+def test_closed_session_rejects_queries():
+    sess = open_session(grid_mesh(4, "unit"))
+    sess.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.estimate(ClusterQuotientEstimator())
+
+
+def test_tau_validation():
+    g = grid_mesh(4, "unit")
+    with pytest.raises(ValueError, match="tau"):
+        open_session(g, tau=0)
+    with pytest.raises(ValueError, match="tau"):
+        open_session(g).estimate(ClusterQuotientEstimator(tau=-3))
+    with pytest.raises(ValueError, match="tau"):
+        SessionPool().estimate_many([g], tau=0)
+    assert open_session(g, tau=1).tau == 1  # explicit small tau is accepted
+
+
+# ---------------------------------------------------------------------------
+# PipelineMetrics aggregation
+# ---------------------------------------------------------------------------
+
+def test_pipeline_metrics_add_and_merge():
+    a = PipelineMetrics(decompose_syncs=2, finalize_syncs=1, quotient_syncs=1,
+                        solve_syncs=1, solve_supersteps=10, n_quotient_edges=5)
+    b = PipelineMetrics(decompose_syncs=3, solve_syncs=2, solve_supersteps=4)
+    c = a + b
+    assert c.decompose_syncs == 5 and c.solve_syncs == 3
+    assert c.solve_supersteps == 14 and c.n_quotient_edges == 5
+    assert c.total_host_syncs == a.total_host_syncs + b.total_host_syncs
+    assert sum([a, b]) == c                       # __radd__ with int 0 start
+    assert PipelineMetrics.merge([a, None, b]) == c
+
+
+def test_interval_multi_instance_panel_keeps_every_result():
+    """Regression: two estimators of the same class in one panel (e.g. a
+    multi-seed lower-bound sweep) must both contribute — the results dict
+    used to key on the shared class name and drop all but the last."""
+    g = grid_mesh(12, "uniform", high=100, seed=5)
+    sess = open_session(g, tau=6)
+    iv = sess.estimate(IntervalEstimator(estimators=(
+        LowerBoundEstimator(rounds=2, seed=0),
+        LowerBoundEstimator(rounds=2, seed=3),
+        ClusterQuotientEstimator())))
+    assert set(iv.estimates) == {
+        "farthest-point", "farthest-point#2", "cluster-quotient"}
+    assert iv.lower == max(r.lower for r in iv.estimates.values()
+                           if r.lower is not None)
+
+
+def test_interval_reports_merged_pipeline_totals():
+    g = grid_mesh(14, "uniform", high=100, seed=3)
+    sess = open_session(g, tau=6)
+    iv = sess.estimate(IntervalEstimator())
+    assert iv.pipeline.total_host_syncs == sum(
+        r.pipeline.total_host_syncs for r in iv.estimates.values())
+    assert iv.pipeline.total_host_syncs > \
+        iv.estimates["cluster-quotient"].pipeline.total_host_syncs
+
+
+# ---------------------------------------------------------------------------
+# estimator bound contract: lower <= exact <= upper, consistent `connected`
+# ---------------------------------------------------------------------------
+
+def _contract(g, tau=4):
+    """Run all three estimators on one session; return (results, interval)."""
+    sess = open_session(g, tau=tau)
+    lo = sess.estimate(LowerBoundEstimator(rounds=3, seed=0))
+    up = sess.estimate(ClusterQuotientEstimator())
+    ds = sess.estimate(DeltaSteppingEstimator(seed=0))
+    iv = sess.estimate(IntervalEstimator(estimators=(
+        LowerBoundEstimator(rounds=3, seed=0), ClusterQuotientEstimator(),
+        DeltaSteppingEstimator(seed=0))))
+    return (lo, up, ds), iv
+
+
+@pytest.mark.parametrize("gen,kw", [
+    (grid_mesh, dict(side=10, weight_dist="uniform", high=100)),
+    (random_connected, dict(n=200, n_edges=700, weight_dist="uniform",
+                            high=2**20)),
+])
+def test_estimator_bound_contract_connected(gen, kw):
+    g = gen(**kw, seed=8)
+    exact = _true_diameter(g)
+    (lo, up, ds), iv = _contract(g)
+    assert lo.lower <= exact <= up.upper
+    assert ds.lower <= exact <= ds.upper
+    assert lo.connected and up.connected and ds.connected and iv.connected
+    assert iv.lower <= exact <= iv.upper
+    assert iv.lower == max(lo.lower, ds.lower)
+    assert iv.upper == min(up.upper, ds.upper)
+
+
+def test_estimator_contract_single_node_and_disconnected():
+    # single node: diameter 0, everyone agrees it is connected
+    (lo, up, ds), iv = _contract(_edgeless(1))
+    assert (lo.connected, up.connected, ds.connected, iv.connected) == \
+        (True,) * 4
+    assert iv.lower == iv.upper == 0
+    # disconnected (two triangles): every estimator must flag it, and the
+    # bracket still certifies the largest finite-distance pair
+    g = _two_triangles()
+    (lo, up, ds), iv = _contract(g, tau=2)
+    assert (lo.connected, up.connected, ds.connected, iv.connected) == \
+        (False,) * 4
+    assert 1 <= iv.lower <= iv.upper
+    # isolated nodes: disconnected as well
+    (lo, up, ds), iv = _contract(_edgeless(5), tau=2)
+    assert (lo.connected, up.connected, ds.connected, iv.connected) == \
+        (False,) * 4
+
+
+def test_interval_bracket_certified_across_components():
+    """Regression: on a disconnected graph, 2*ecc from an SSSP source in a
+    SMALL component is no upper bound on the largest finite-distance pair —
+    a lower-bound hop landing in a BIGGER component must not invert the
+    bracket. The SSSP upper is dropped when disconnected; the cluster upper
+    (which does cover all components) carries the bracket."""
+    # component {0,1}: one heavy edge (1000); component {2,3,4}: unit triangle
+    u = np.array([0, 2, 3, 4], np.int32)
+    v = np.array([1, 3, 4, 2], np.int32)
+    w = np.array([1000, 1, 1, 1], np.int32)
+    g = EdgeList.from_undirected(5, u, v, w)
+    sess = open_session(g, tau=2)
+    ds = sess.estimate(DeltaSteppingEstimator(seed=0))    # source in triangle
+    assert not ds.connected and ds.upper is None and ds.lower == 1
+    iv = sess.estimate(IntervalEstimator(estimators=(
+        LowerBoundEstimator(rounds=2, seed=11),           # source on heavy edge
+        DeltaSteppingEstimator(seed=0),
+        ClusterQuotientEstimator())))
+    assert not iv.connected
+    assert iv.lower == 1000                               # realized heavy path
+    assert iv.lower <= iv.upper                           # bracket still sound
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(16, 80),
+    ef=st.integers(2, 5),
+    seed=st.integers(0, 10_000),
+    wmax=st.sampled_from([1, 10, 1000, 2**20]),
+)
+def test_property_estimator_bracket(n, ef, seed, wmax):
+    """LowerBoundEstimator <= scipy exact diameter <= ClusterQuotient upper,
+    with a consistent connected flag, on random connected graphs."""
+    g = random_connected(n, n * ef, seed=seed, weight_dist="uniform",
+                         high=wmax)
+    exact = _true_diameter(g)
+    (lo, up, ds), iv = _contract(g)
+    assert lo.lower <= exact <= up.upper
+    assert ds.lower <= exact <= ds.upper
+    assert lo.connected == up.connected == ds.connected == iv.connected
+    assert iv.lower <= exact <= iv.upper
