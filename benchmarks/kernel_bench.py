@@ -83,8 +83,10 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
     with bounds matching the legacy scripts' numbers.
     """
     from repro.core import (
+        CascadeEstimator,
         ClusterQuotientEstimator,
         IntervalEstimator,
+        LowerBoundEstimator,
         cluster,
         open_session,
     )
@@ -134,6 +136,40 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
         "host_syncs_solve": pm.solve_syncs,
         "solve_supersteps": pm.solve_supersteps,
         "seconds": round(dt_pipe, 2),
+    }
+
+    # multi-level quotient cascade: same session, quotient re-decomposed
+    # until it fits a small solve budget. Acceptance: the final solve runs
+    # STRICTLY fewer BF supersteps than the flat pipeline's, and the
+    # cascade's upper still brackets against the farthest-point lower.
+    t0 = time.perf_counter()
+    casc = sess.estimate(CascadeEstimator(levels=2, tau_solve=64))
+    dt_casc = time.perf_counter() - t0
+    cpm = casc.pipeline
+    assert cpm.cascade_levels >= 1, "bench cascade never cascaded"
+    assert cpm.solve_supersteps < pm.solve_supersteps, (
+        f"cascade solve ran {cpm.solve_supersteps} supersteps, flat ran "
+        f"{pm.solve_supersteps}")
+    # each extra level only coarsens: diam(Q_l) <= 2 R_{l+1} + diam(Q_{l+1})
+    assert casc.phi_approx >= est.phi_approx, (casc.phi_approx, est.phi_approx)
+    iv_c = sess.estimate(IntervalEstimator(estimators=(
+        LowerBoundEstimator(), CascadeEstimator(levels=2, tau_solve=64))))
+    assert iv_c.lower <= iv_c.upper, (iv_c.lower, iv_c.upper)
+    assert iv_c.connected == casc.connected == est.connected
+    row["cascade"] = {
+        "levels": cpm.cascade_levels,
+        "tau_solve": 64,
+        "phi_approx": casc.phi_approx,
+        "level_clusters": cpm.level_clusters,
+        "level_supersteps": cpm.level_supersteps,
+        "level_syncs": cpm.level_syncs,
+        "solve_supersteps": cpm.solve_supersteps,
+        "solve_supersteps_flat": pm.solve_supersteps,
+        "host_syncs_total": cpm.total_host_syncs,
+        "interval_lower": iv_c.lower,
+        "interval_upper": iv_c.upper,
+        "connected": casc.connected,
+        "seconds": round(dt_casc, 2),
     }
 
     # session serving contract: repeat queries must stay resident. (No

@@ -16,6 +16,7 @@ import time
 
 from repro.config.base import GraphEngineConfig
 from repro.core import (
+    CascadeEstimator,
     ClusterQuotientEstimator,
     DeltaSteppingEstimator,
     IntervalEstimator,
@@ -43,6 +44,10 @@ for name, g in graphs.items():
             est = sess.estimate(ClusterQuotientEstimator(variant=variant))
             print(f"{name:14s} CL-{variant:8s} {est.phi_approx:12d} "
                   f"{est.growing_steps:7d} {time.time()-t0:6.1f}")
+        t0 = time.time()
+        casc = sess.estimate(CascadeEstimator(levels=2, tau_solve=64))
+        print(f"{name:14s} {'cascade-2':10s} {casc.phi_approx:12d} "
+              f"{casc.growing_steps:7d} {time.time()-t0:6.1f}")
         t0 = time.time()
         sssp = sess.estimate(DeltaSteppingEstimator())
         print(f"{name:14s} {'SSSP-BF':10s} {sssp.phi_approx:12d} "

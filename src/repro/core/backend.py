@@ -134,6 +134,19 @@ class SingleDeviceBackend:
         self.weight = jnp.asarray(edges.weight)
         self.transfers = 0
 
+    @classmethod
+    def from_device(cls, n_nodes: int, src: jnp.ndarray, dst: jnp.ndarray,
+                    weight: jnp.ndarray) -> "SingleDeviceBackend":
+        """Wrap ALREADY-RESIDENT device edge arrays (int32, inert-padded)
+        — the cascade re-enters the engine on a quotient level without a
+        host round-trip or re-upload (``core/quotient.QuotientLevel``)."""
+        be = cls.__new__(cls)
+        be.n_nodes = n_nodes
+        be.n_pad = n_nodes
+        be.src, be.dst, be.weight = src, dst, weight
+        be.transfers = 0
+        return be
+
     def init_state(self) -> EngineState:
         self.transfers += 1
         return init_state(self.n_pad)

@@ -262,7 +262,7 @@ def _finalize(
 
 
 def run_cluster(
-    edges: EdgeList,
+    edges: Optional[EdgeList],
     backend: RelaxBackend,
     tau: int,
     *,
@@ -274,17 +274,27 @@ def run_cluster(
     max_steps_per_phase: int = 0,
     threshold_const: float = 8.0,
     max_resamples: int = MAX_RESAMPLES,
+    max_delta: Optional[int] = None,
 ) -> Decomposition:
-    """Paper Algorithm 1 on the device-resident engine."""
-    n = edges.n_nodes
+    """Paper Algorithm 1 on the device-resident engine.
+
+    ``edges`` may be None when the graph exists only as the backend's
+    device arrays (a quotient cascade level) — ``max_delta`` (the Δ-doubling
+    ceiling, normally derived from the host weight sum) must then be given
+    explicitly; the node count comes from ``backend.n_nodes``.
+    """
+    if edges is None and max_delta is None:
+        raise ValueError("run_cluster(edges=None) needs an explicit max_delta")
+    n = backend.n_nodes if edges is None else edges.n_nodes
     metrics = EngineMetrics()
     if n == 0:
         return _empty_decomposition(0, metrics)
     logn = max(math.log(max(n, 2)), 1.0)
     threshold = max(int(threshold_const * tau * logn), 1)
     num_it = jnp.int32(max_steps_per_phase or max(2 * n // max(tau, 1), 8))
-    max_delta = jnp.int32(
-        min(np.int64(edges.weight.astype(np.int64).sum()) + 1, 2**30))
+    if max_delta is None:
+        max_delta = int(np.int64(edges.weight.astype(np.int64).sum()) + 1)
+    max_delta = jnp.int32(min(max(int(max_delta), 1), 2**30))
     p_scale = jnp.float32(gamma * tau * logn)
 
     transfers0 = backend.transfers

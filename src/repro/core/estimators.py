@@ -26,8 +26,8 @@ disconnected input the bounds cover only finite-distance pairs and
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
-from typing import ClassVar, Dict, Optional, Protocol, Tuple, runtime_checkable
+from dataclasses import dataclass, field
+from typing import ClassVar, Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
@@ -35,17 +35,15 @@ from repro.common import Timer, get_logger
 from repro.core.cluster import Decomposition, cluster, cluster2
 from repro.core.quotient import (
     build_quotient_device,
+    build_quotient_from_level,
     build_quotient_numpy,
+    quotient_as_edgelist,
     quotient_diameter,
     solve_device_quotient,
 )
-from repro.core.session import GraphSession
-from repro.core.sssp import INF as _SSSP_INF
+from repro.core.session import GraphSession, tau_for
 
 log = get_logger("repro.estimators")
-
-# the SSSP loops' unreached sentinel, as a host scalar for dist masking
-_INF32 = np.int32(_SSSP_INF)
 
 
 @dataclass
@@ -61,10 +59,19 @@ class PipelineMetrics:
 
     decompose_syncs: int = 0   # one per engine stage (stop-decision scalars)
     finalize_syncs: int = 0    # packed final-plane fetch (1 per decomposition)
-    quotient_syncs: int = 0    # (n_clusters, n_edges) scalar fetch
+    quotient_syncs: int = 0    # (k, m, max_w, w_sum) counter fetch, 1 / level
     solve_syncs: int = 0       # packed (diameter, connected, steps, ecc) fetch
     solve_supersteps: int = 0  # device BF supersteps inside the solve
-    n_quotient_edges: int = 0
+    n_quotient_edges: int = 0  # level-0 quotient edge count
+    # cascade accounting (CascadeEstimator): one list entry per EXTRA level
+    # (the flat pipeline is level 0 and keeps these empty, so a level-0
+    # cascade stays field-identical to ClusterQuotientEstimator). Lists
+    # concatenate under ``+`` like the scalar counters add.
+    cascade_levels: int = 0              # extra decomposition levels run
+    level_syncs: List[int] = field(default_factory=list)       # per level
+    level_supersteps: List[int] = field(default_factory=list)  # per level
+    level_clusters: List[int] = field(default_factory=list)    # quotient k
+                                                               # after level
 
     @property
     def total_host_syncs(self) -> int:
@@ -104,7 +111,11 @@ class DiameterEstimate:
     # ``connected`` — for a disconnected graph it upper-bounds the largest
     # finite-distance pair (the true diameter is infinite).
     pipeline: Optional[PipelineMetrics] = None
-    quotient_ecc: Optional[np.ndarray] = None  # int64 [n_clusters]
+    # int64 eccentricities of the SOLVED quotient's clusters: length
+    # n_clusters for the flat pipeline; for a cascade that ran extra levels
+    # it covers the FINAL level's clusters (pipeline.level_clusters[-1] of
+    # them), in original units (scaled back by the cumulative rescale).
+    quotient_ecc: Optional[np.ndarray] = None
     # which estimator produced this, and the certified bracket it provides:
     # ``lower <= Phi(G) <= upper`` (each may be None when the method gives
     # no bound on that side; bounds cover finite pairs when disconnected).
@@ -140,23 +151,29 @@ class DiameterEstimator(Protocol):
 # ---------------------------------------------------------------------------
 
 
+def _fetch_quotient_counters(dq, pm: PipelineMetrics):
+    """ONE packed fetch of the four device counters:
+    (n_clusters, n_edges, max_weight, weight_sum)."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        kmws = np.asarray(jnp.stack([
+            dq.n_clusters.astype(jnp.int64), dq.n_edges.astype(jnp.int64),
+            dq.max_weight, dq.weight_sum]))
+    pm.quotient_syncs += 1
+    return int(kmws[0]), int(kmws[1]), int(kmws[2]), int(kmws[3])
+
+
 def _device_quotient_solve(edges, dec: Decomposition, backend,
                            pm: PipelineMetrics):
     """quotient + local solve, device-resident. Returns
     (phi_quotient, eccentricities, connected)."""
-    import jax.numpy as jnp
-    from jax.experimental import enable_x64
-
     dq = build_quotient_device(edges, dec, backend=backend)
     if dq is None:  # no nodes or no edges: quotient is trivially empty
         k = dec.n_clusters
         return 0, np.zeros(k, np.int64), k <= 1
-    with enable_x64():  # ONE packed fetch of the three device counters
-        kmw = np.asarray(jnp.stack([
-            dq.n_clusters.astype(jnp.int64), dq.n_edges.astype(jnp.int64),
-            dq.max_weight]))
-    pm.quotient_syncs += 1
-    k, m, wmax = int(kmw[0]), int(kmw[1]), int(kmw[2])
+    k, m, wmax, _ = _fetch_quotient_counters(dq, pm)
     pm.n_quotient_edges = m
     if k <= 1:
         return 0, np.zeros(k, np.int64), True
@@ -164,6 +181,153 @@ def _device_quotient_solve(edges, dec: Decomposition, backend,
     pm.solve_syncs += 1
     pm.solve_supersteps = steps
     return diam, ecc, connected
+
+
+def _cascade_quotient_solve(edges, dec: Decomposition, backend,
+                            pm: PipelineMetrics, cfg, tau_solve: int,
+                            max_levels: int):
+    """Multi-level quotient cascade (companion paper arXiv:1407.3144 applies
+    the decomposition RECURSIVELY until the residual graph is small).
+
+    While the quotient still exceeds the solve budget (``k > tau_solve``)
+    and levels remain, re-enter the engine ON THE QUOTIENT: rescale its
+    int64 weights into the engine's int32 planes (``quotient_as_edgelist``,
+    ceiling division — conservative), decompose with a device-resident
+    ``SingleDeviceBackend`` over the resident buffers, and quotient again.
+    Per-level cluster radii accumulate into the upper bound:
+
+        Phi(G) <= 2 R_0 + sum_{l>=1} S_l * 2 R_l + S_L * diam(Q_L)
+
+    with S_l the cumulative rescale factor (1 unless weights overflowed
+    int32). Returns (phi_quotient_tail, ecc, connected, extra_steps) where
+    ``phi_quotient_tail`` is everything except level-0's ``2 R_0`` — so
+    ``phi = tail + 2 * dec.radius`` holds at every level count, and a
+    level-0 cascade is field-identical to the flat pipeline.
+    """
+    from repro.core.backend import SingleDeviceBackend
+    from repro.core.engine import run_cluster
+
+    dq = build_quotient_device(edges, dec, backend=backend)
+    if dq is None:  # no nodes or no edges: quotient is trivially empty
+        k = dec.n_clusters
+        return 0, np.zeros(k, np.int64), k <= 1, 0
+    k, m, wmax, wsum = _fetch_quotient_counters(dq, pm)
+    pm.n_quotient_edges = m
+    scale_total = 1
+    radius_tail = 0   # sum_{l>=1} S_l * 2 R_l
+    extra_steps = 0
+    level = 0
+    while level < max_levels and k > max(tau_solve, 1) and m > 0:
+        level += 1
+        lv = quotient_as_edgelist(dq, k, m, wmax, wsum)
+        be = SingleDeviceBackend.from_device(lv.n_nodes, lv.src, lv.dst,
+                                             lv.weight)
+        dec_l = run_cluster(
+            None, be, tau_for(k, cfg.tau_fraction),
+            gamma=cfg.gamma, variant=cfg.variant,
+            delta0=max(lv.weight_sum // max(m, 1), 1),
+            seed=cfg.seed + level, max_stages=cfg.max_stages,
+            max_steps_per_phase=cfg.max_steps_per_phase,
+            max_delta=lv.weight_sum + 1,
+        )
+        scale_total *= lv.scale
+        radius_tail += scale_total * 2 * dec_l.radius
+        extra_steps += dec_l.growing_steps
+        pm.decompose_syncs += dec_l.metrics.host_syncs
+        pm.finalize_syncs += dec_l.metrics.finalize_syncs
+        dq = build_quotient_from_level(lv, dec_l)
+        k, m, wmax, wsum = _fetch_quotient_counters(dq, pm)
+        pm.level_syncs.append(dec_l.metrics.host_syncs
+                              + dec_l.metrics.finalize_syncs + 1)
+        pm.level_supersteps.append(dec_l.growing_steps)
+        pm.level_clusters.append(k)
+        log.info("cascade level %d: %d clusters -> %d (scale=%d steps=%d)",
+                 level, lv.n_nodes, k, lv.scale, dec_l.growing_steps)
+        if k == lv.n_nodes:
+            # no shrinkage (the level's stage threshold exceeded its node
+            # count -> all singletons): further levels would repeat the
+            # same non-progress, so solve what we have
+            log.info("cascade level %d did not shrink the quotient; "
+                     "solving at %d clusters", level, k)
+            break
+    pm.cascade_levels = level
+    if k <= 1:
+        return radius_tail, np.zeros(k, np.int64), True, extra_steps
+    diam, ecc, connected, steps = solve_device_quotient(dq, k, m, wmax)
+    pm.solve_syncs += 1
+    pm.solve_supersteps = steps
+    return (radius_tail + scale_total * diam,
+            np.asarray(ecc, np.int64) * scale_total, connected, extra_steps)
+
+
+def _resolve_query_cfg(session: GraphSession, est) -> Tuple[object, int]:
+    """Apply an estimator's per-query overrides to the session config and
+    resolve tau. Shared by ClusterQuotientEstimator and CascadeEstimator."""
+    cfg = session.cfg
+    delta_init = est.delta_init
+    if delta_init is not None:
+        # resolve symbolic modes through the session: on a pooled
+        # (padded) session "avg"/"min" must reflect the REAL edges
+        delta_init = str(session.resolve_delta_init(delta_init))
+    overrides = {k: v for k, v in (
+        ("variant", est.variant), ("seed", est.seed),
+        ("delta_init", delta_init),
+        ("use_cluster2", est.use_cluster2)) if v is not None}
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    tau = est.tau if est.tau is not None else session.tau
+    if tau < 1:
+        raise ValueError(f"tau must be >= 1, got {tau}")
+    return cfg, tau
+
+
+def _run_decomposition(edges, backend, cfg, tau: int,
+                       pm: PipelineMetrics) -> Decomposition:
+    """Level-0 decomposition on the session's resident backend."""
+    if cfg.use_cluster2:
+        dec: Decomposition = cluster2(
+            edges, tau, gamma=cfg.gamma, seed=cfg.seed,
+            delta_init=cfg.delta_init, relax_fn=backend,
+        )
+    else:
+        dec = cluster(
+            edges, tau, gamma=cfg.gamma, variant=cfg.variant,
+            delta_init=cfg.delta_init, seed=cfg.seed,
+            max_stages=cfg.max_stages,
+            max_steps_per_phase=cfg.max_steps_per_phase,
+            relax_fn=backend,
+        )
+    if dec.metrics is not None:
+        pm.decompose_syncs = dec.metrics.host_syncs
+        pm.finalize_syncs = dec.metrics.finalize_syncs
+    return dec
+
+
+def _package_estimate(method: str, dec: Decomposition, phi_q: int,
+                      connected: bool, pm: PipelineMetrics, ecc,
+                      seconds: float, extra_steps: int = 0) -> DiameterEstimate:
+    phi = phi_q + 2 * dec.radius
+    log.info(
+        "phi_approx=%d (quotient=%d radius=%d clusters=%d steps=%d "
+        "host_syncs=%d) in %.2fs",
+        phi, phi_q, dec.radius, dec.n_clusters,
+        dec.growing_steps + extra_steps, pm.total_host_syncs, seconds,
+    )
+    return DiameterEstimate(
+        phi_approx=phi,
+        phi_quotient=phi_q,
+        radius=dec.radius,
+        n_clusters=dec.n_clusters,
+        growing_steps=dec.growing_steps + extra_steps,
+        n_stages=dec.n_stages,
+        delta_end=dec.delta_end,
+        seconds=seconds,
+        connected=connected,
+        pipeline=pm,
+        quotient_ecc=ecc,
+        method=method,
+        upper=phi,
+    )
 
 
 @dataclass
@@ -188,73 +352,78 @@ class ClusterQuotientEstimator:
     use_cluster2: Optional[bool] = None
 
     def estimate(self, session: GraphSession) -> DiameterEstimate:
-        cfg = session.cfg
-        delta_init = self.delta_init
-        if delta_init is not None:
-            # resolve symbolic modes through the session: on a pooled
-            # (padded) session "avg"/"min" must reflect the REAL edges
-            delta_init = str(session.resolve_delta_init(delta_init))
-        overrides = {k: v for k, v in (
-            ("variant", self.variant), ("seed", self.seed),
-            ("delta_init", delta_init),
-            ("use_cluster2", self.use_cluster2)) if v is not None}
-        if overrides:
-            cfg = dataclasses.replace(cfg, **overrides)
-        tau = self.tau if self.tau is not None else session.tau
-        if tau < 1:
-            raise ValueError(f"tau must be >= 1, got {tau}")
+        cfg, tau = _resolve_query_cfg(session, self)
         edges, backend = session.edges, session.backend
         pm = PipelineMetrics()
         ecc = None
         with session.track_query(), Timer() as t:
-            if cfg.use_cluster2:
-                dec: Decomposition = cluster2(
-                    edges, tau, gamma=cfg.gamma, seed=cfg.seed,
-                    delta_init=cfg.delta_init, relax_fn=backend,
-                )
-            else:
-                dec = cluster(
-                    edges, tau, gamma=cfg.gamma, variant=cfg.variant,
-                    delta_init=cfg.delta_init, seed=cfg.seed,
-                    max_stages=cfg.max_stages,
-                    max_steps_per_phase=cfg.max_steps_per_phase,
-                    relax_fn=backend,
-                )
-            if dec.metrics is not None:
-                pm.decompose_syncs = dec.metrics.host_syncs
-                pm.finalize_syncs = dec.metrics.finalize_syncs
+            dec = _run_decomposition(edges, backend, cfg, tau, pm)
             if self.solver == "scipy":
                 q = build_quotient_numpy(edges, dec)
                 phi_q, connected = quotient_diameter(q)
             else:
                 phi_q, ecc, connected = _device_quotient_solve(
                     edges, dec, backend, pm)
-            phi = phi_q + 2 * dec.radius
             if not connected:
                 log.warning(
                     "graph is disconnected: phi_approx=%d only bounds "
-                    "finite-distance pairs", phi)
-        log.info(
-            "phi_approx=%d (quotient=%d radius=%d clusters=%d steps=%d "
-            "host_syncs=%d) in %.2fs",
-            phi, phi_q, dec.radius, dec.n_clusters, dec.growing_steps,
-            pm.total_host_syncs, t.seconds,
-        )
-        return DiameterEstimate(
-            phi_approx=phi,
-            phi_quotient=phi_q,
-            radius=dec.radius,
-            n_clusters=dec.n_clusters,
-            growing_steps=dec.growing_steps,
-            n_stages=dec.n_stages,
-            delta_end=dec.delta_end,
-            seconds=t.seconds,
-            connected=connected,
-            pipeline=pm,
-            quotient_ecc=ecc,
-            method=self.name,
-            upper=phi,
-        )
+                    "finite-distance pairs", phi_q + 2 * dec.radius)
+        return _package_estimate(self.name, dec, phi_q, connected, pm, ecc,
+                                 t.seconds)
+
+
+@dataclass
+class CascadeEstimator:
+    """Multi-level quotient cascade: the paper pipeline applied RECURSIVELY
+    (companion paper arXiv:1407.3144) until the residual quotient fits the
+    batched-BF solve budget.
+
+    Level 0 decomposes the session graph on its resident backend exactly
+    like ``ClusterQuotientEstimator``; while the quotient still has more
+    than ``tau_solve`` clusters and ``levels`` allows, the engine re-enters
+    ON THE QUOTIENT (``quotient_as_edgelist`` -> device-resident
+    ``SingleDeviceBackend`` -> decompose -> quotient), accumulating each
+    level's ``2 * radius`` (times the cumulative int64->int32 weight
+    rescale) into the conservative upper bound. ``levels=0`` is
+    field-identical to the flat pipeline.
+
+    Deeper levels always run single-device — the quotient is small by
+    construction, mirroring the paper's "solve locally in one reducer".
+    ``n_clusters``/``radius``/``n_stages``/``delta_end`` on the returned
+    estimate describe LEVEL 0 (per-level breakdowns live in
+    ``pipeline.level_*``); ``quotient_ecc`` covers the final solved level.
+    """
+
+    name: ClassVar[str] = "cascade"
+
+    levels: int = 2
+    tau_solve: Optional[int] = None
+    tau: Optional[int] = None
+    variant: Optional[str] = None
+    seed: Optional[int] = None
+    delta_init: Optional[str] = None
+    use_cluster2: Optional[bool] = None
+
+    def estimate(self, session: GraphSession) -> DiameterEstimate:
+        if self.levels < 0:
+            raise ValueError(f"levels must be >= 0, got {self.levels}")
+        tau_solve = (self.tau_solve if self.tau_solve is not None
+                     else session.tau_solve)
+        if tau_solve < 2:
+            raise ValueError(f"tau_solve must be >= 2, got {tau_solve}")
+        cfg, tau = _resolve_query_cfg(session, self)
+        edges, backend = session.edges, session.backend
+        pm = PipelineMetrics()
+        with session.track_query(), Timer() as t:
+            dec = _run_decomposition(edges, backend, cfg, tau, pm)
+            phi_q, ecc, connected, extra = _cascade_quotient_solve(
+                edges, dec, backend, pm, cfg, tau_solve, self.levels)
+            if not connected:
+                log.warning(
+                    "graph is disconnected: phi_approx=%d only bounds "
+                    "finite-distance pairs", phi_q + 2 * dec.radius)
+        return _package_estimate(self.name, dec, phi_q, connected, pm, ecc,
+                                 t.seconds, extra_steps=extra)
 
 
 # ---------------------------------------------------------------------------
@@ -273,20 +442,30 @@ def _trivial_estimate(method: str, n_nodes: int) -> DiameterEstimate:
 
 def _sssp_from(session: GraphSession, source: int, delta: Optional[int]):
     """One SSSP on the resident edge arrays; ONE packed host fetch of
-    (dist, supersteps). ``delta=None`` -> Bellman-Ford."""
+    (dist, supersteps). ``delta=None`` -> Bellman-Ford. Returns
+    (dist, supersteps, inf) — the distance dtype follows the same provable
+    bound as ``sssp.bellman_ford`` (int64 when ``n * max_weight`` would
+    overflow int32, so heavy-weight graphs never wrap negative)."""
     import jax.numpy as jnp
+    from jax.experimental import enable_x64
 
-    from repro.core.sssp import _bf_loop, _delta_stepping_loop
+    from repro.core.sssp import _bf_loop, _delta_stepping_loop, sssp_dtype_for
 
     n = session.n_nodes
     src, dst, w = session.flat_device_edges()
-    d0 = jnp.full(n, jnp.int32(_INF32), dtype=jnp.int32).at[source].set(0)
-    if delta is None:
-        d, k = _bf_loop(src, dst, w, d0, n)
-    else:
-        d, k = _delta_stepping_loop(src, dst, w, d0, jnp.int32(delta), n)
-    out = np.asarray(jnp.concatenate([d, k[None].astype(jnp.int32)]))
-    return out[:n], int(out[n])
+    dtype, inf = sssp_dtype_for(n, session.max_weight, delta or 0)
+    with enable_x64():
+        infj = jnp.asarray(inf, dtype)
+        d0 = jnp.full(n, infj, dtype=dtype).at[source].set(0)
+        wd = w.astype(dtype)
+        if delta is None:
+            d, k = _bf_loop(src, dst, wd, d0, infj, n)
+        else:
+            d, k = _delta_stepping_loop(src, dst, wd, d0,
+                                        jnp.asarray(delta, dtype), infj, n)
+        out = np.asarray(jnp.concatenate(
+            [d.astype(jnp.int64), k[None].astype(jnp.int64)]))
+    return out[:n], int(out[n]), inf
 
 
 @dataclass
@@ -315,8 +494,8 @@ class DeltaSteppingEstimator:
         with session.track_query(), Timer() as t:
             rng = np.random.default_rng(self.seed)
             s = int(rng.integers(n))
-            dist, supersteps = _sssp_from(session, s, self.delta)
-        reached = dist < _INF32
+            dist, supersteps, inf = _sssp_from(session, s, self.delta)
+        reached = dist < inf
         ecc = int(dist[reached].max())
         connected = bool(reached.all())
         pm = PipelineMetrics(solve_syncs=1, solve_supersteps=supersteps)
@@ -361,13 +540,13 @@ class LowerBoundEstimator:
             connected = True
             pm = PipelineMetrics()
             for _ in range(self.rounds):
-                dist, supersteps = _sssp_from(session, s, None)
+                dist, supersteps, inf = _sssp_from(session, s, None)
                 pm.solve_syncs += 1
                 pm.solve_supersteps += supersteps
                 total_steps += supersteps
                 hops += 1
-                connected = connected and bool((dist < _INF32).all())
-                fin = np.where(dist < _INF32, dist, -1)
+                connected = connected and bool((dist < inf).all())
+                fin = np.where(dist < inf, dist, -1)
                 far = int(fin.argmax())
                 best = max(best, int(fin.max()))
                 if hops == 1:

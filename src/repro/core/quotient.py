@@ -36,7 +36,7 @@ from jax.experimental import enable_x64
 from repro.common import next_multiple
 from repro.core.cluster import Decomposition
 from repro.graph.segment_ops import segment_min_triple
-from repro.graph.structures import EdgeList
+from repro.graph.structures import MAX_WEIGHT, EdgeList, weight_scale_for
 
 # Unreached sentinel for the int64 solve. Guarded adds keep everything
 # strictly below 2 * INF64 < 2^63, so int64 arithmetic never overflows.
@@ -44,6 +44,9 @@ INF64 = np.int64(2**62)
 # k is padded to a multiple of this (and m to a multiple of 8x) so the solve
 # program re-compiles only per size bucket, not per graph.
 K_BUCKET = 16
+# cascade levels pad the quotient edge arrays to a multiple of this so the
+# per-level engine programs recompile only per size bucket
+LEVEL_EDGE_BUCKET = 256
 
 
 @dataclass
@@ -71,6 +74,10 @@ class DeviceQuotient(NamedTuple):
     n_edges: jnp.ndarray     # int32 scalar (on device)
     max_weight: jnp.ndarray  # int64 scalar — lets the solve pick an int32
                              # fast path when k_pad * max_weight < 2^31
+    weight_sum: jnp.ndarray  # int64 scalar, sum of coalesced quotient
+                             # weights — the cascade derives Delta_init and
+                             # max_delta for the next level from it without
+                             # an extra fetch
 
 
 def build_quotient_numpy(edges: EdgeList, dec: Decomposition) -> QuotientGraph:
@@ -145,11 +152,13 @@ def _quotient_kernel(src, dst, w, mask, final_c, final_pathw, *, n: int):
         seg, num_segments=max(E, 1),
     )
     n_q = jnp.sum(first).astype(jnp.int32)
+    q_w = q_w[:E]
     return DeviceQuotient(
         centers=centers.astype(jnp.int32),
-        src=q_src[:E], dst=q_dst[:E], weight=q_w[:E],
+        src=q_src[:E], dst=q_dst[:E], weight=q_w,
         n_clusters=k, n_edges=n_q,
         max_weight=jnp.max(jnp.where(cross, wq, jnp.int64(0))),
+        weight_sum=jnp.sum(jnp.where(q_w < key_inf, q_w, jnp.int64(0))),
     )
 
 
@@ -213,6 +222,92 @@ def build_quotient(edges: EdgeList, dec: Decomposition, backend=None) -> Quotien
             dst=np.asarray(dq.dst[:m]),
             weight=np.asarray(dq.weight[:m]),
         )
+
+
+# ---------------------------------------------------------------------------
+# cascade levels: re-enter the engine on the quotient itself
+# ---------------------------------------------------------------------------
+
+
+class QuotientLevel(NamedTuple):
+    """A ``DeviceQuotient`` re-expressed in the engine's edge layout: flat
+    int32 device arrays over ``n_nodes = k`` compact cluster labels, padding
+    slots rewritten as inert self-loops (0 -> 0, w = 1).
+
+    Quotient weights are int64 sums while the engine's ``EngineState``
+    planes are int32, so weights are rescaled by ``scale`` (ceiling
+    division — conservative: ``scale * dist_rescaled >= dist_true`` for
+    every pair, so upper bounds survive the cascade). ``scale`` is 1
+    whenever the level already fits int32.
+    """
+
+    n_nodes: int          # k (host)
+    n_edges: int          # real quotient edge count m (host)
+    src: jnp.ndarray      # int32 [e_pad]
+    dst: jnp.ndarray      # int32 [e_pad]
+    weight: jnp.ndarray   # int32 [e_pad], ceil(w / scale); 1 on padding
+    scale: int            # original units = scale * level units
+    weight_sum: int       # upper bound on sum(weight) in LEVEL units
+
+    def to_edgelist(self) -> EdgeList:
+        """Host materialization (tests / oracles): the first ``n_edges``
+        slots are exactly the coalesced quotient edges."""
+        m = self.n_edges
+        with enable_x64():
+            return EdgeList(
+                self.n_nodes,
+                np.asarray(self.src[:m]), np.asarray(self.dst[:m]),
+                np.asarray(self.weight[:m]))
+
+
+@jax.jit
+def _level_edges_kernel(src, dst, w, scale):
+    """Rewrite sliced DeviceQuotient buffers as engine-ready edges: valid
+    slots keep their endpoints with ceil-rescaled int32 weight, invalid
+    slots (weight >= INF64, incl. the empty-segment int64-max fill) become
+    inert self-loops. Traced under enable_x64 (w is int64)."""
+    valid = w < jnp.int64(INF64)
+    w32 = jnp.where(valid, (w + scale - 1) // scale, jnp.int64(1))
+    w32 = jnp.clip(w32, 1, jnp.int64(int(MAX_WEIGHT))).astype(jnp.int32)
+    s = jnp.where(valid, src, jnp.int32(0))
+    t = jnp.where(valid, dst, jnp.int32(0))
+    return s, t, w32
+
+
+def quotient_as_edgelist(
+    dq: DeviceQuotient, k: int, m: int, max_weight: int, weight_sum: int = 0,
+    *, edge_bucket: int = LEVEL_EDGE_BUCKET,
+) -> QuotientLevel:
+    """Adapter: ``DeviceQuotient`` buffers -> the engine's edge layout,
+    entirely on device (no host round-trip — the (k, m, max_weight,
+    weight_sum) counters must already be fetched).
+
+    Edge arrays are sliced to an ``edge_bucket`` multiple so same-scale
+    levels share one compiled stage program. ``weight_sum`` (level units)
+    uses the ceil-sum bound ``sum(ceil(w/s)) <= sum(w)/s + m``.
+    """
+    scale = weight_scale_for(max_weight)
+    E = dq.src.shape[0]
+    e_pad = min(next_multiple(max(m, 1), edge_bucket), max(E, 1))
+    with enable_x64():
+        src, dst, w32 = _level_edges_kernel(
+            dq.src[:e_pad], dq.dst[:e_pad], dq.weight[:e_pad],
+            jnp.int64(scale))
+    ws = int(weight_sum) // scale + m
+    return QuotientLevel(n_nodes=k, n_edges=m, src=src, dst=dst, weight=w32,
+                         scale=scale, weight_sum=ws)
+
+
+def build_quotient_from_level(level: QuotientLevel, dec: Decomposition
+                              ) -> DeviceQuotient:
+    """One more cascade level: the jitted quotient pass over a level's
+    device edge arrays and its decomposition's device planes. Padding
+    self-loops are never cross edges, so no mask is needed beyond ones."""
+    fc, fp = _decomposition_planes(dec, level.n_nodes)
+    mask = jnp.ones(level.src.shape, dtype=bool)
+    with enable_x64():
+        return _quotient_kernel(level.src, level.dst, level.weight, mask,
+                                fc, fp, n=level.n_nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +395,7 @@ def quotient_diameter_device(q: QuotientGraph) -> Tuple[int, np.ndarray, bool]:
             src=jnp.asarray(src), dst=jnp.asarray(dst), weight=jnp.asarray(w),
             n_clusters=jnp.int32(k), n_edges=jnp.int32(len(src)),
             max_weight=jnp.int64(wmax),
+            weight_sum=jnp.int64(int(w.sum()) if len(w) else 0),
         )
     diam, ecc, connected, _ = solve_device_quotient(dq, k, len(src), wmax)
     return diam, ecc, connected

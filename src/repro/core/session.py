@@ -44,6 +44,10 @@ log = get_logger("repro.session")
 
 EDGE_BUCKET = 256  # pooled sessions pad edge arrays to a multiple of this
 
+# Quotient solve budget (max clusters the batched-BF solve takes head-on);
+# above it ``CascadeEstimator`` re-enters the engine on the quotient.
+DEFAULT_TAU_SOLVE = 1024
+
 
 def tau_for(n_nodes: int, fraction: float = 1e-3, minimum: int = 4) -> int:
     """Paper Section 5: pick tau so the quotient has ~ n/1000 nodes. CLUSTER
@@ -84,12 +88,15 @@ class GraphSession:
         cfg: Optional[GraphEngineConfig] = None,
         *,
         tau: Optional[int] = None,
+        tau_solve: Optional[int] = None,
         backend: Optional[RelaxBackend] = None,
         metrics: Optional[SessionMetrics] = None,
         delta_stats: Optional[Dict[str, int]] = None,
     ):
         if tau is not None and tau < 1:
             raise ValueError(f"tau must be >= 1, got {tau}")
+        if tau_solve is not None and tau_solve < 2:
+            raise ValueError(f"tau_solve must be >= 2, got {tau_solve}")
         self.edges: Optional[EdgeList] = edges
         self._n_nodes = edges.n_nodes
         self._n_edges = edges.n_edges
@@ -110,6 +117,10 @@ class GraphSession:
         self.backend: Optional[RelaxBackend] = backend
         self.tau = tau if tau is not None else tau_for(
             edges.n_nodes, self.cfg.tau_fraction)
+        # solve budget for CascadeEstimator: quotients above this many
+        # clusters get another decomposition level instead of a direct solve
+        self.tau_solve = tau_solve if tau_solve is not None else DEFAULT_TAU_SOLVE
+        self._max_weight: Optional[int] = None
         self._flat_edges: Optional[Tuple] = None
         self._closed = False
         log.debug("opened session: %d nodes, %d edges, tau=%d, backend=%s",
@@ -125,6 +136,17 @@ class GraphSession:
     @property
     def n_edges(self) -> int:
         return self._n_edges
+
+    @property
+    def max_weight(self) -> int:
+        """Largest edge weight, cached for the session's lifetime (the SSSP
+        estimators pick their distance dtype from it on every query; pooled
+        padding self-loops carry w=1 and cannot change the max)."""
+        self._check_open()
+        if self._max_weight is None:
+            self._max_weight = (int(self.edges.weight.max())
+                                if self._n_edges else 1)
+        return self._max_weight
 
     def resolve_delta_init(self, mode: str) -> int:
         """Resolve a symbolic Delta_init ("avg" | "min" | numeric) for this
@@ -207,13 +229,16 @@ def open_session(
     cfg: Optional[GraphEngineConfig] = None,
     *,
     tau: Optional[int] = None,
+    tau_solve: Optional[int] = None,
     backend: Optional[RelaxBackend] = None,
     metrics: Optional[SessionMetrics] = None,
 ) -> GraphSession:
     """Open a graph once for many queries. ``backend`` passes a prebuilt
     ``RelaxBackend`` through (e.g. ``DistributedEngine.make_relax_fn()``);
-    otherwise one is constructed from ``cfg.backend``."""
-    return GraphSession(edges, cfg, tau=tau, backend=backend, metrics=metrics)
+    otherwise one is constructed from ``cfg.backend``. ``tau_solve`` sets
+    the session's cascade solve budget (``CascadeEstimator``)."""
+    return GraphSession(edges, cfg, tau=tau, tau_solve=tau_solve,
+                        backend=backend, metrics=metrics)
 
 
 # ---------------------------------------------------------------------------
@@ -228,9 +253,13 @@ def _pad_edges(edges: EdgeList, e_pad: int) -> EdgeList:
     cross edge in the quotient, so the decomposition and estimate are the
     same as on the unpadded graph — but all graphs in a bucket now share
     one compiled pipeline.
+
+    A graph with NO nodes has no valid endpoint for the padding self-loop:
+    a ``0 -> 0`` edge would materialize a phantom node the estimators then
+    see through ``flat_device_edges`` — the empty graph stays unpadded.
     """
     e = edges.n_edges
-    if e_pad <= e:
+    if e_pad <= e or edges.n_nodes == 0:
         return edges
     pad = e_pad - e
     z = np.zeros(pad, np.int32)
@@ -257,9 +286,13 @@ class SessionPool:
     """
 
     def __init__(self, cfg: Optional[GraphEngineConfig] = None,
-                 edge_bucket: int = EDGE_BUCKET):
+                 edge_bucket: int = EDGE_BUCKET,
+                 tau_solve: Optional[int] = None):
+        if tau_solve is not None and tau_solve < 2:
+            raise ValueError(f"tau_solve must be >= 2, got {tau_solve}")
         self.cfg = cfg or GraphEngineConfig()
         self.edge_bucket = edge_bucket
+        self.tau_solve = tau_solve
         self.metrics = SessionMetrics()
         self.sessions: List[GraphSession] = []
 
@@ -277,6 +310,7 @@ class SessionPool:
         gcfg = dataclasses.replace(self.cfg, delta_init=str(delta0))
         e_pad = e_pad or next_multiple(max(edges.n_edges, 1), self.edge_bucket)
         return GraphSession(_pad_edges(edges, e_pad), gcfg, tau=tau,
+                            tau_solve=self.tau_solve,
                             metrics=self.metrics, delta_stats=stats)
 
     def open(self, edges: EdgeList, *, tau: Optional[int] = None,

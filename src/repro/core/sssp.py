@@ -13,9 +13,19 @@
 - ``farthest_point_lower_bound``: repeated SSSP hopping to the farthest node
   (how the paper computes the Phi column of Table 1).
 
+Distance dtype is picked from a provable bound (``sssp_dtype_for``): every
+shortest path has < n edges, so when ``n * max_weight`` fits int32 the
+loops run in int32; otherwise they run in int64 under ``enable_x64``
+(legal edge weights go up to 2^30 - 1, which overflows int32 after a
+handful of hops — the old int32-only loops silently wrapped negative and
+reported false minima). ``SSSPResult.inf`` carries the unreached sentinel
+of the chosen dtype so callers mask with the right value.
+
 Disconnected inputs: every estimator surfaces a ``connected`` flag
 (consistent with ``DiameterEstimate.connected``) instead of silently
-bounding only finite-distance pairs.
+bounding only finite-distance pairs. Empty graphs (``n_nodes == 0``) get
+the degenerate estimate (diameter 0, ``connected=True`` — the same
+``n_nodes <= 1`` convention as ``DiameterEstimate``) instead of a crash.
 """
 from __future__ import annotations
 
@@ -30,12 +40,28 @@ import numpy as np
 from repro.graph.structures import EdgeList
 
 INF = jnp.int32(2**31 - 1)
+INF64 = 2**62  # int64 unreached sentinel; guarded adds stay < 2^63
+
+
+def sssp_dtype_for(n_nodes: int, max_weight: int, delta: int = 0):
+    """(dtype, inf) from the provable distance bound: every shortest path
+    has < n edges, so distances are < n * max_weight. int32 fast path when
+    that fits, int64 (under enable_x64) otherwise.
+
+    ``delta``: headroom for Δ-stepping's bucket bound ``(b + 1) * delta``
+    — it can exceed the largest distance by up to one bucket, so bucketed
+    callers must pass their delta or the int32 fast path could wrap the
+    bound negative and stall the bucket walk."""
+    if n_nodes * max(int(max_weight), 1) + int(delta) < 2**31 - 1:
+        return jnp.int32, 2**31 - 1
+    return jnp.int64, INF64
 
 
 @dataclass
 class SSSPResult:
     dist: np.ndarray
     supersteps: int
+    inf: int = int(2**31 - 1)  # unreached sentinel of dist's dtype
 
 
 @dataclass
@@ -46,7 +72,12 @@ class MultiSSSPResult:
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
-def _bf_loop(src, dst, w, d0, n_nodes: int):
+def _bf_loop(src, dst, w, d0, inf, n_nodes: int):
+    """Dtype-generic frontier Bellman-Ford; ``inf`` is the unreached
+    sentinel in d0's dtype. Overflow safety comes from the caller's dtype
+    pick (``sssp_dtype_for``): admitted ``ds < inf`` are real path sums
+    < n * max_weight, so the guarded add ``ds + w`` provably fits — int64
+    additionally keeps ``inf`` below dtype_max / 2."""
     def cond(carry):
         _, changed, _ = carry
         return changed
@@ -54,8 +85,8 @@ def _bf_loop(src, dst, w, d0, n_nodes: int):
     def body(carry):
         d, _, k = carry
         ds = d[src]
-        ok = ds < INF
-        cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, INF)
+        ok = ds < inf
+        cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, inf)
         dmin = jax.ops.segment_min(cand, dst, num_segments=n_nodes)
         upd = dmin < d
         return jnp.where(upd, dmin, d), jnp.any(upd), k + 1
@@ -64,11 +95,23 @@ def _bf_loop(src, dst, w, d0, n_nodes: int):
     return d, k
 
 
+def _edge_arrays(edges: EdgeList, dtype):
+    return (jnp.asarray(edges.src), jnp.asarray(edges.dst),
+            jnp.asarray(edges.weight).astype(dtype))
+
+
 def bellman_ford(edges: EdgeList, source: int) -> SSSPResult:
+    from jax.experimental import enable_x64
+
     n = edges.n_nodes
-    d0 = jnp.full(n, INF, dtype=jnp.int32).at[source].set(0)
-    d, k = _bf_loop(jnp.asarray(edges.src), jnp.asarray(edges.dst), jnp.asarray(edges.weight), d0, n)
-    return SSSPResult(dist=np.asarray(d), supersteps=int(k))
+    wmax = int(edges.weight.max()) if edges.n_edges else 1
+    dtype, inf = sssp_dtype_for(n, wmax)
+    with enable_x64():
+        infj = jnp.asarray(inf, dtype)
+        d0 = jnp.full(n, infj, dtype=dtype).at[source].set(0)
+        d, k = _bf_loop(*_edge_arrays(edges, dtype), d0, infj, n)
+        dist = np.asarray(d)
+    return SSSPResult(dist=dist, supersteps=int(k), inf=inf)
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
@@ -108,18 +151,15 @@ def batched_bf_loop(src, dst, w, d0, inf, n_nodes: int):
 def multi_source_bellman_ford(edges: EdgeList, sources) -> MultiSSSPResult:
     """All-sources-at-once SSSP (one compiled program, one host sync).
 
-    Distance dtype is picked from a provable bound: every shortest path has
-    < n edges, so when ``n * max_weight`` fits int32 the solve runs in
-    int32; otherwise it runs int64 under enable_x64 (legal edge weights go
-    up to 2^30 - 1, which overflows int32 after a handful of hops).
+    Distance dtype is picked by ``sssp_dtype_for`` from the same provable
+    bound as the single-source loops.
     """
     from jax.experimental import enable_x64
 
     n = edges.n_nodes
     sources = np.asarray(sources, dtype=np.int32)
     wmax = int(edges.weight.max()) if edges.n_edges else 1
-    int32_safe = n * max(wmax, 1) < 2**31 - 1
-    dtype, inf = (jnp.int32, 2**31 - 1) if int32_safe else (jnp.int64, 2**62)
+    dtype, inf = sssp_dtype_for(n, wmax)
     with enable_x64():
         inf = jnp.asarray(inf, dtype)
         d0 = jnp.full((n, len(sources)), inf, dtype=dtype)
@@ -133,25 +173,31 @@ def multi_source_bellman_ford(edges: EdgeList, sources) -> MultiSSSPResult:
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
-def _delta_stepping_loop(src, dst, w, d0, delta, n_nodes: int):
-    light = w < delta
+def _delta_stepping_loop(src, dst, w, d0, delta, inf, n_nodes: int):
+    """Dtype-generic bucketed SSSP. ``delta`` must be in d0's dtype, and
+    the caller must have picked the dtype with delta headroom
+    (``sssp_dtype_for(n, wmax, delta)``) so the bucket bound
+    ``(b + 1) * delta`` — which can exceed the largest distance by one
+    bucket — never overflows.
 
-    def relax(d, mask_src):
-        ds = d[src]
-        ok = (ds < INF) & mask_src[src]
-        cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, INF)
-        dmin = jax.ops.segment_min(cand, dst, num_segments=n_nodes)
-        upd = dmin < d
-        return jnp.where(upd, dmin, d), jnp.any(upd)
+    Superstep accounting: each inner light-relax iteration is one
+    superstep; the per-bucket heavy pass counts ONE superstep only when the
+    settled bucket actually has an admissible heavy relaxation — a bucket
+    with no heavy edges costs no round on a round-driven platform, and
+    counting it inflated the competitor's Table-3 rounds.
+    """
+    light = w < delta
+    one = jnp.asarray(1, d0.dtype)
+    zero = jnp.asarray(0, d0.dtype)
 
     def outer_cond(carry):
         d, b, k = carry
         # any unsettled node in a future bucket?
-        return jnp.any((d < INF) & (d >= b * delta)) & (k < jnp.int32(2**30))
+        return jnp.any((d < inf) & (d >= b * delta)) & (k < jnp.int32(2**30))
 
     def outer_body(carry):
         d, b, k = carry
-        lo, hi = b * delta, (b + 1) * delta
+        lo, hi = b * delta, (b + one) * delta
 
         def inner_cond(c):
             _, changed, _ = c
@@ -162,51 +208,65 @@ def _delta_stepping_loop(src, dst, w, d0, delta, n_nodes: int):
             in_bucket = (d_ >= lo) & (d_ < hi)
             # light-edge relaxations from the current bucket
             ds = d_[src]
-            ok = (ds < INF) & in_bucket[src] & light
-            cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, INF)
+            ok = (ds < inf) & in_bucket[src] & light
+            cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, inf)
             dmin = jax.ops.segment_min(cand, dst, num_segments=n_nodes)
             upd = dmin < d_
             return jnp.where(upd, dmin, d_), jnp.any(upd), k_ + 1
 
         d, _, k = jax.lax.while_loop(inner_cond, inner_body, (d, jnp.bool_(True), k))
-        # one heavy pass for the settled bucket
+        # one heavy pass for the settled bucket — a superstep only if any
+        # heavy relaxation is admissible from this bucket
         in_bucket = (d >= lo) & (d < hi)
         ds = d[src]
-        ok = (ds < INF) & in_bucket[src] & ~light
-        cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, INF)
+        ok = (ds < inf) & in_bucket[src] & ~light
+        cand = jnp.where(ok, jnp.where(ok, ds, 0) + w, inf)
         dmin = jax.ops.segment_min(cand, dst, num_segments=n_nodes)
         d = jnp.where(dmin < d, dmin, d)
+        k = k + jnp.any(ok).astype(jnp.int32)
         # jump straight to the next non-empty bucket: crawling b+1 burns a
         # full inner-loop superstep per EMPTY bucket, pathological when
         # weights are large relative to delta (road graphs)
-        ahead = (d >= hi) & (d < INF)
-        d_next = jnp.min(jnp.where(ahead, d, INF))
-        b = jnp.where(jnp.any(ahead), d_next // delta, b + 1)
-        return d, b, k + 1
+        ahead = (d >= hi) & (d < inf)
+        d_next = jnp.min(jnp.where(ahead, d, inf))
+        b = jnp.where(jnp.any(ahead), d_next // delta, b + one)
+        return d, b, k
 
-    d, b, k = jax.lax.while_loop(outer_cond, outer_body, (d0, jnp.int32(0), jnp.int32(0)))
+    d, b, k = jax.lax.while_loop(
+        outer_cond, outer_body, (d0, zero, jnp.int32(0)))
     return d, k
 
 
 def delta_stepping(edges: EdgeList, source: int, delta: int) -> SSSPResult:
+    from jax.experimental import enable_x64
+
     n = edges.n_nodes
-    d0 = jnp.full(n, INF, dtype=jnp.int32).at[source].set(0)
-    d, k = _delta_stepping_loop(
-        jnp.asarray(edges.src), jnp.asarray(edges.dst), jnp.asarray(edges.weight),
-        d0, jnp.int32(delta), n,
-    )
-    return SSSPResult(dist=np.asarray(d), supersteps=int(k))
+    wmax = int(edges.weight.max()) if edges.n_edges else 1
+    dtype, inf = sssp_dtype_for(n, wmax, delta)
+    with enable_x64():
+        infj = jnp.asarray(inf, dtype)
+        d0 = jnp.full(n, infj, dtype=dtype).at[source].set(0)
+        d, k = _delta_stepping_loop(
+            *_edge_arrays(edges, dtype), d0, jnp.asarray(delta, dtype),
+            infj, n,
+        )
+        dist = np.asarray(d)
+    return SSSPResult(dist=dist, supersteps=int(k), inf=inf)
 
 
 def diameter_2approx_sssp(edges: EdgeList, seed: int = 0) -> Tuple[int, int, int, bool]:
     """(lower_bound, upper_bound, supersteps, connected) from one
     random-source SSSP. On a disconnected input the bounds only cover the
     source's component — ``connected=False`` flags that (consistent with
-    ``DiameterEstimate.connected``; the true diameter is infinite)."""
+    ``DiameterEstimate.connected``; the true diameter is infinite).
+    An empty graph returns the degenerate (0, 0, 0, True) — the same
+    ``n_nodes <= 1`` convention as ``DiameterEstimate.connected``."""
+    if edges.n_nodes == 0:
+        return 0, 0, 0, True
     rng = np.random.default_rng(seed)
     s = int(rng.integers(edges.n_nodes))
     res = bellman_ford(edges, s)
-    reached = res.dist < np.int32(INF)
+    reached = res.dist < res.inf
     ecc = int(res.dist[reached].max())
     return ecc, 2 * ecc, res.supersteps, bool(reached.all())
 
@@ -214,15 +274,18 @@ def diameter_2approx_sssp(edges: EdgeList, seed: int = 0) -> Tuple[int, int, int
 def farthest_point_lower_bound(edges: EdgeList, rounds: int = 4, seed: int = 0) -> Tuple[int, bool]:
     """Paper Table 1's Phi column: repeated SSSP hopping to the farthest
     node. Returns (lower_bound, connected); on a disconnected input the
-    bound only covers components the hops visited."""
+    bound only covers components the hops visited. An empty graph returns
+    the degenerate (0, True)."""
+    if edges.n_nodes == 0:
+        return 0, True
     rng = np.random.default_rng(seed)
     s = int(rng.integers(edges.n_nodes))
     best = 0
     connected = True
     for _ in range(rounds):
         res = bellman_ford(edges, s)
-        connected = connected and bool((res.dist < np.int32(INF)).all())
-        dist = np.where(res.dist < np.int32(INF), res.dist, -1)
+        connected = connected and bool((res.dist < res.inf).all())
+        dist = np.where(res.dist < res.inf, res.dist, -1)
         far = int(dist.argmax())
         best = max(best, int(dist.max()))
         if far == s:

@@ -1,4 +1,11 @@
-from repro.graph.structures import EdgeList, DeviceGraph, INF_I32
+from repro.graph.structures import (
+    EdgeList,
+    DeviceGraph,
+    INF_I32,
+    MAX_WEIGHT,
+    rescale_weights,
+    weight_scale_for,
+)
 from repro.graph.generators import (
     grid_mesh,
     random_geometric,
@@ -14,6 +21,9 @@ __all__ = [
     "EdgeList",
     "DeviceGraph",
     "INF_I32",
+    "MAX_WEIGHT",
+    "rescale_weights",
+    "weight_scale_for",
     "grid_mesh",
     "random_geometric",
     "rmat",

@@ -27,6 +27,28 @@ INF_I32 = np.int32(2**31 - 1)
 MAX_WEIGHT = np.int32(2**30 - 1)
 
 
+def weight_scale_for(max_weight: int, cap: int = int(MAX_WEIGHT)) -> int:
+    """Smallest integer ``s`` with ``ceil(max_weight / s) <= cap`` — the
+    rescale factor that folds wider-than-int32 weights (e.g. int64 quotient
+    sums) back into the engine's admissible [1, cap] range."""
+    return max(-(-int(max_weight) // int(cap)), 1)
+
+
+def rescale_weights(w: np.ndarray, cap: int = int(MAX_WEIGHT)):
+    """Ceil-rescale positive integer weights into [1, cap].
+
+    Returns ``(w_rescaled, scale)`` with ``w_rescaled = ceil(w / scale)``.
+    Ceiling keeps shortest paths conservative: for any path,
+    ``scale * sum(ceil(w/scale)) >= sum(w)``, so distances (and therefore
+    diameter upper bounds) computed on the rescaled graph, multiplied back
+    by ``scale``, still upper-bound the true ones.
+    """
+    w = np.asarray(w, dtype=np.int64)
+    wmax = int(w.max()) if len(w) else 0
+    scale = weight_scale_for(wmax, cap)
+    return np.maximum((w + scale - 1) // scale, 1), scale
+
+
 @dataclass
 class EdgeList:
     """Host-side directed edge list. Undirected graphs carry both directions."""

@@ -3,12 +3,16 @@ a resident ``GraphSession`` (open once, query with any estimator).
 
   PYTHONPATH=src python -m repro.launch.diameter --graph road --n 20000 \
       [--variant stop] [--delta-init avg] [--tau 16] \
+      [--levels 2] [--tau-solve 64] \
       [--backend single|sharded|pallas] [--comm halo] [--partition cluster] \
       [--compare-sssp] [--interval]
 
-``--compare-sssp`` and ``--interval`` run the competitor estimators against
-the SAME session — no re-upload between methods. ``--distributed`` is kept
-as an alias for ``--backend sharded``.
+``--levels N`` runs the multi-level quotient cascade (``CascadeEstimator``):
+whenever the quotient still exceeds ``--tau-solve`` clusters, the engine
+re-enters on the quotient itself (up to N extra levels) before the batched
+BF solve. ``--compare-sssp`` and ``--interval`` run the competitor
+estimators against the SAME session — no re-upload between methods.
+``--distributed`` is kept as an alias for ``--backend sharded``.
 """
 from __future__ import annotations
 
@@ -19,6 +23,7 @@ import jax
 from repro.common import get_logger
 from repro.config.base import GraphEngineConfig
 from repro.core import (
+    CascadeEstimator,
     ClusterQuotientEstimator,
     DeltaSteppingEstimator,
     IntervalEstimator,
@@ -40,10 +45,28 @@ def add_tau_argument(ap: argparse.ArgumentParser) -> None:
                          "n/1000 rule via tau_for()")
 
 
+def add_cascade_arguments(ap: argparse.ArgumentParser) -> None:
+    """The shared --levels/--tau-solve CLI contract (also launch/serve.py)."""
+    ap.add_argument("--levels", type=int, default=0,
+                    help="extra quotient-cascade decomposition levels "
+                         "(0 = flat single-level pipeline)")
+    ap.add_argument("--tau-solve", type=int, default=None,
+                    help="quotient solve budget (>= 2): cascade whenever the "
+                         "quotient exceeds this many clusters; default "
+                         "DEFAULT_TAU_SOLVE")
+
+
 def validate_tau(ap: argparse.ArgumentParser, tau) -> None:
     if tau is not None and tau < 1:
         ap.error(f"--tau must be >= 1 (got {tau}); omit it to use the "
                  "paper's n/1000 default")
+
+
+def validate_cascade(ap: argparse.ArgumentParser, args) -> None:
+    if args.levels < 0:
+        ap.error(f"--levels must be >= 0 (got {args.levels})")
+    if args.tau_solve is not None and args.tau_solve < 2:
+        ap.error(f"--tau-solve must be >= 2 (got {args.tau_solve})")
 
 
 def build_graph(kind: str, n: int, seed: int):
@@ -64,6 +87,7 @@ def main() -> int:
     ap.add_argument("--graph", default="road", choices=["road", "social", "mesh"])
     ap.add_argument("--n", type=int, default=10_000)
     add_tau_argument(ap)
+    add_cascade_arguments(ap)
     ap.add_argument("--variant", default="stop", choices=["stop", "complete"])
     ap.add_argument("--delta-init", default="avg")
     ap.add_argument("--cluster2", action="store_true")
@@ -82,6 +106,7 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     validate_tau(ap, args.tau)
+    validate_cascade(ap, args)
     backend_kind = "sharded" if args.distributed else args.backend
 
     g = build_graph(args.graph, args.n, args.seed)
@@ -106,8 +131,11 @@ def main() -> int:
                  dict(mesh.shape), args.comm)
     # single/pallas: the session builds the backend from cfg.backend
 
-    sess = open_session(g, cfg, tau=args.tau, backend=backend)
-    est = sess.estimate(ClusterQuotientEstimator())
+    sess = open_session(g, cfg, tau=args.tau, tau_solve=args.tau_solve,
+                        backend=backend)
+    estimator = (CascadeEstimator(levels=args.levels) if args.levels
+                 else ClusterQuotientEstimator())
+    est = sess.estimate(estimator)
     log.info("Phi_approx = %d  (quotient %d + 2 x radius %d)  "
              "clusters=%d stages=%d growing_steps=%d connected=%s  %.2fs",
              est.phi_approx, est.phi_quotient, est.radius, est.n_clusters,
@@ -119,6 +147,11 @@ def main() -> int:
                  pm.total_host_syncs, pm.decompose_syncs, pm.finalize_syncs,
                  pm.quotient_syncs, pm.solve_syncs, pm.solve_supersteps,
                  pm.n_quotient_edges)
+        if pm.cascade_levels:
+            log.info("cascade: %d extra levels, clusters per level %s, "
+                     "supersteps per level %s, syncs per level %s",
+                     pm.cascade_levels, pm.level_clusters,
+                     pm.level_supersteps, pm.level_syncs)
 
     if args.compare_sssp:
         # same resident session: the competitor re-uses the device buffers

@@ -7,7 +7,8 @@ rebuilds and zero edge re-uploads (asserted via ``SessionMetrics``).
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --mode graph-diameter \
       --batch 8 --graph-n 2000 --queries 3 [--graph road] [--tau 12] \
-      [--estimator cluster|sssp|lower|interval] \
+      [--estimator cluster|sssp|lower|interval|cascade] \
+      [--levels 2] [--tau-solve 64] \
       [--check-amortization 2.0] [--sync-budget bench]
 """
 from __future__ import annotations
@@ -26,28 +27,38 @@ from repro.models import transformer as tf_mod
 
 log = get_logger("repro.serve")
 
-ESTIMATORS = ("cluster", "sssp", "lower", "interval")
+ESTIMATORS = ("cluster", "sssp", "lower", "interval", "cascade")
 
 
-def _make_estimator(name: str):
-    from repro.core import (ClusterQuotientEstimator, DeltaSteppingEstimator,
-                            IntervalEstimator, LowerBoundEstimator)
+def _make_estimator(name: str, levels: int = 0):
+    from repro.core import (CascadeEstimator, ClusterQuotientEstimator,
+                            DeltaSteppingEstimator, IntervalEstimator,
+                            LowerBoundEstimator)
 
+    if name == "cascade":
+        # --levels 0 with an explicit --estimator cascade keeps the
+        # estimator's own default depth
+        return CascadeEstimator(levels=levels) if levels else CascadeEstimator()
     return {"cluster": ClusterQuotientEstimator,
             "sssp": DeltaSteppingEstimator,
             "lower": LowerBoundEstimator,
             "interval": IntervalEstimator}[name]()
 
 
-def _resolve_sync_budget(spec: str):
+def _resolve_sync_budget(spec: str, estimator: str = "cluster"):
     """"off" -> None (disabled), "bench" -> the recorded BENCH_engine.json
-    pipeline budget, anything else -> an explicit integer ceiling (0 is a
-    real ceiling — every host sync fails it — not "off")."""
+    budget (the "cascade" block's when serving the cascade — its extra
+    levels legitimately cost more syncs than the flat pipeline — else the
+    "pipeline" block's), anything else -> an explicit integer ceiling (0 is
+    a real ceiling — every host sync fails it — not "off")."""
     if spec == "off":
         return None
     if spec == "bench":
         with open(bench_engine_path()) as f:
-            return int(json.load(f)["pipeline"]["host_syncs_total"])
+            bench = json.load(f)
+        if estimator == "cascade" and "cascade" in bench:
+            return int(bench["cascade"]["host_syncs_total"])
+        return int(bench["pipeline"]["host_syncs_total"])
     return int(spec)
 
 
@@ -81,10 +92,18 @@ def serve_graph_diameter(args) -> int:
     graphs = [build_graph(args.graph, args.graph_n, seed=s)
               for s in range(args.batch)]
     cfg = GraphEngineConfig(backend=args.backend)
-    estimator = _make_estimator(args.estimator)
-    sync_budget = _resolve_sync_budget(args.sync_budget)
+    # --levels alone activates the cascade (same contract as
+    # launch/diameter.py); other estimators don't take levels
+    est_name = args.estimator
+    if args.levels and est_name == "cluster":
+        est_name = "cascade"
+    elif args.levels and est_name not in ("cascade",):
+        log.warning("--levels %d is ignored by --estimator %s",
+                    args.levels, est_name)
+    estimator = _make_estimator(est_name, levels=args.levels)
+    sync_budget = _resolve_sync_budget(args.sync_budget, est_name)
 
-    pool = SessionPool(cfg)
+    pool = SessionPool(cfg, tau_solve=args.tau_solve)
     # one shared edge-pad bucket across the whole batch (per-graph buckets
     # would pad to different sizes and recompile)
     e_pad = next_multiple(max(g.n_edges for g in graphs) or 1,
@@ -162,10 +181,13 @@ def main() -> int:
     # graph-diameter mode
     ap.add_argument("--graph", default="road",
                     choices=["road", "social", "mesh"])
-    from repro.launch.diameter import add_tau_argument, validate_tau
+    from repro.launch.diameter import (add_cascade_arguments,
+                                       add_tau_argument, validate_cascade,
+                                       validate_tau)
 
     ap.add_argument("--graph-n", type=int, default=2000)
     add_tau_argument(ap)
+    add_cascade_arguments(ap)
     ap.add_argument("--backend", default="single",
                     choices=["single", "sharded", "pallas"])
     ap.add_argument("--queries", type=int, default=2,
@@ -179,6 +201,7 @@ def main() -> int:
                          "(use the recorded BENCH_engine.json value) | <int>")
     args = ap.parse_args()
     validate_tau(ap, args.tau)
+    validate_cascade(ap, args)
     if args.queries < 1:
         ap.error("--queries must be >= 1")
     if args.batch < 1:

@@ -170,6 +170,45 @@ def test_pooled_delta_init_override_matches_unpooled():
     _assert_estimates_identical(est_pool, est_solo)
 
 
+def test_pool_empty_graph_gets_no_phantom_node():
+    """Regression: _pad_edges padded with 0 -> 0 self-loops even when
+    n_nodes == 0, materializing a phantom node (edges pointing at node 0 of
+    a 0-node graph) in pooled sessions."""
+    pool = SessionPool()
+    sess = pool.open(_edgeless(0))
+    assert sess.n_nodes == 0
+    assert sess.n_edges == 0, "empty graph must stay unpadded"
+    est = sess.estimate(ClusterQuotientEstimator())
+    assert est.phi_approx == 0 and est.connected
+    # batch path: an empty graph among real ones keeps its degenerate
+    # estimate and the real graphs their unpooled numbers
+    graphs = [_edgeless(0), grid_mesh(6, "unit"), _edgeless(3)]
+    ests = pool.estimate_many(graphs, tau=4)
+    assert ests[0].phi_approx == 0 and ests[0].connected
+    solo = open_session(graphs[1], tau=4).estimate(ClusterQuotientEstimator())
+    assert ests[1].phi_approx == solo.phi_approx
+    assert not ests[2].connected  # 3 isolated nodes
+
+
+def test_sssp_estimators_survive_max_weights_on_session():
+    """Regression: the estimator SSSP path used int32-only loops — on a
+    heavy-weight path graph distances wrap negative and the reported
+    bounds collapse. The bounds must bracket the true diameter."""
+    n = 6
+    u = np.arange(n - 1, dtype=np.int32)
+    g = EdgeList.from_undirected(n, u, u + 1,
+                                 np.full(n - 1, 2**30 - 1, np.int32))
+    true = 5 * (2**30 - 1)
+    sess = open_session(g, tau=2)
+    ds = sess.estimate(DeltaSteppingEstimator(seed=0))
+    assert ds.connected
+    assert 0 < ds.lower <= true <= ds.upper
+    lo = sess.estimate(LowerBoundEstimator(rounds=3, seed=0))
+    assert lo.lower == true  # farthest-point hop realizes the full path
+    ds2 = sess.estimate(DeltaSteppingEstimator(seed=0, delta=2**20))
+    assert 0 < ds2.lower <= true <= ds2.upper
+
+
 def test_delta_stepping_rejects_nonpositive_delta():
     sess = open_session(grid_mesh(4, "unit"))
     with pytest.raises(ValueError, match="delta"):
