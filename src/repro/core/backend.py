@@ -147,6 +147,15 @@ class SingleDeviceBackend:
         be.transfers = 0
         return be
 
+    def rebind(self, src: jnp.ndarray, dst: jnp.ndarray,
+               weight: jnp.ndarray) -> None:
+        """Swap the resident edge arrays IN PLACE (dynamic updates mutate
+        the graph under a live backend: scatter-updated buffers keep their
+        shape and every compiled program; a capacity-grown store re-lands
+        here with a longer shape, costing one retrace per capacity bucket).
+        Node count and grow spec are unchanged — only the edges move."""
+        self.src, self.dst, self.weight = src, dst, weight
+
     def init_state(self) -> EngineState:
         self.transfers += 1
         return init_state(self.n_pad)

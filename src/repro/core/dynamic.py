@@ -1,0 +1,808 @@
+"""Dynamic-graph subsystem: incremental updates on resident sessions.
+
+The decomposition pipeline assumes a frozen graph — before this module, any
+edge change forced a cold ``open_session()`` rebuild (re-upload, re-pack,
+full re-decomposition). But low-diameter decompositions are repairable from
+approximate distance information alone (Becker–Emek–Lenzen), and the only
+state the diameter bound actually depends on is the set of certified
+cluster radii (Ceccarello et al.): each node v carries ``final_pathw[v]`` =
+the weight of a REAL path from its center, and the quotient edge weights
+are built from those certificates. So updates can be absorbed by bounded
+incremental relaxation on the already-resident device buffers:
+
+  * **insertions / weight decreases** — distances only shrink, so every
+    existing certificate stays valid; the new edges seed a dirty frontier
+    and a monotone tightening relax (``backend.grow``, the PR 1 engine's
+    own jitted program, ``complete`` variant) propagates the improvements.
+    Every PREFIX of the monotone relax is certified, so ``tighten_cap``
+    bounds its supersteps without giving anything up.
+  * **deletions / weight increases** — a certificate may now reference a
+    path that no longer exists. One edge sweep rebuilds the WITNESS FOREST
+    (``_forest_repair``): each non-center picks an in-cluster parent with
+    strictly smaller old ``pathw`` — acyclic, rooted at the ``pathw = 0``
+    centers — minimizing ``pathw[u] + w`` under the current weights, and
+    pointer doubling (O(log n) node-local rounds, no edge traffic)
+    re-derives every certificate along the forest: weight increases
+    inflate exactly the affected subtrees, with no invalidation fixpoint
+    and no kill cascade. Nodes whose chain fails to root (descent edge
+    deleted, no alternative) are DEAD: a confined regrow re-attaches them
+    from the alive boundary through the same engine relax, and anything
+    still unreached becomes a singleton cluster (Alg. 1's own treatment of
+    uncovered nodes — which is what keeps disconnecting deletions
+    certified). When the retracted fraction exceeds
+    ``session.rebuild_fraction`` the session falls back to a full
+    re-decomposition (fresh center sampling).
+
+Dirty tracking is node-granular on purpose: cluster-granular marking would
+be unsound — with the "stop" variant a node's realized path may thread
+through nodes whose FINAL cluster differs (mid-stage reassignment races,
+~20% of nodes on RMAT graphs) — so ``ensure_dynamic`` recertifies the
+initial decomposition through the forest once at dynamic-mode entry (and
+after every full rebuild), after which every certificate is witnessed by
+an in-cluster parent edge and dead sets stay proportional to the update.
+
+The quotient is refreshed incrementally (``core/quotient.py::
+quotient_update_device``): only (cluster, cluster) keys touching dirty
+clusters are recomputed — the PR 2 kernel runs over just the dirty-incident
+edge slice and the result is merged with the cached quotient's clean
+entries — so every post-update ``estimate()`` still returns a certified
+``[lower, upper]`` bracket at a cost proportional to the touched region.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import Timer, get_logger, next_multiple
+from repro.core.engine import Decomposition
+from repro.core.state import EngineState, INF
+from repro.graph.segment_ops import segment_min_triple
+from repro.graph.structures import MAX_WEIGHT, EdgeStore
+
+log = get_logger("repro.dynamic")
+
+# delta ceiling for repair relaxation: matches the engine's max_delta clip
+# (2^30) so candidate adds provably stay inside int32
+_REPAIR_DELTA = 2**30
+# while_loop iteration cap for repair relaxation (fixpoint detection exits
+# far earlier; this only guards against adversarial cycles)
+_REPAIR_NUM_IT = 2**30
+# default superstep cap for the insert/decrease tightening relax — every
+# prefix of the monotone relax is certified, so the cap trades tightness
+# (picked back up by later batches) for bounded update cost
+DEFAULT_TIGHTEN_CAP = 8
+# dirty-incident quotient slices are padded to a multiple of this so the
+# incremental-refresh programs recompile once per size bucket
+DIRTY_EDGE_BUCKET = 256
+
+
+def _i32(x) -> np.ndarray:
+    a = np.asarray(x, dtype=np.int32).reshape(-1)
+    return a
+
+
+@dataclass
+class UpdateBatch:
+    """One batch of edge mutations, in DIRECTED triples.
+
+    Semantics against the resident graph (which keeps at most one slot per
+    directed key, min-coalesced — the ``EdgeList.coalesce`` contract):
+
+      * insert (u, v, w): new key -> edge added; existing key -> the slot
+        keeps ``min(old, w)`` (inserting a heavier parallel edge is a no-op,
+        exactly like coalescing a multigraph).
+      * reweight (u, v, w): SETS the weight (increase or decrease); the key
+        must exist.
+      * delete (u, v): removes the key; it must exist.
+
+    Undirected graphs store both directions — build batches with
+    ``symmetric=True`` (the default of the constructors) to emit both.
+    """
+
+    insert_src: np.ndarray = field(default_factory=lambda: _i32([]))
+    insert_dst: np.ndarray = field(default_factory=lambda: _i32([]))
+    insert_weight: np.ndarray = field(default_factory=lambda: _i32([]))
+    reweight_src: np.ndarray = field(default_factory=lambda: _i32([]))
+    reweight_dst: np.ndarray = field(default_factory=lambda: _i32([]))
+    reweight_weight: np.ndarray = field(default_factory=lambda: _i32([]))
+    delete_src: np.ndarray = field(default_factory=lambda: _i32([]))
+    delete_dst: np.ndarray = field(default_factory=lambda: _i32([]))
+
+    def __post_init__(self):
+        for name in ("insert_src", "insert_dst", "insert_weight",
+                     "reweight_src", "reweight_dst", "reweight_weight",
+                     "delete_src", "delete_dst"):
+            setattr(self, name, _i32(getattr(self, name)))
+        if not (len(self.insert_src) == len(self.insert_dst)
+                == len(self.insert_weight)):
+            raise ValueError("insert arrays length mismatch")
+        if not (len(self.reweight_src) == len(self.reweight_dst)
+                == len(self.reweight_weight)):
+            raise ValueError("reweight arrays length mismatch")
+        if len(self.delete_src) != len(self.delete_dst):
+            raise ValueError("delete arrays length mismatch")
+        for w in (self.insert_weight, self.reweight_weight):
+            if len(w) and (w.min() < 1 or w.max() > int(MAX_WEIGHT)):
+                raise ValueError("update weights must be in [1, 2^30)")
+
+    @property
+    def n_events(self) -> int:
+        return (len(self.insert_src) + len(self.reweight_src)
+                + len(self.delete_src))
+
+    @staticmethod
+    def _sym(u, v, w=None):
+        u, v = _i32(u), _i32(v)
+        uu = np.concatenate([u, v])
+        vv = np.concatenate([v, u])
+        if w is None:
+            return uu, vv
+        w = _i32(w)
+        return uu, vv, np.concatenate([w, w])
+
+    @classmethod
+    def inserts(cls, u, v, w, *, symmetric: bool = True) -> "UpdateBatch":
+        if symmetric:
+            u, v, w = cls._sym(u, v, w)
+        return cls(insert_src=u, insert_dst=v, insert_weight=w)
+
+    @classmethod
+    def reweights(cls, u, v, w, *, symmetric: bool = True) -> "UpdateBatch":
+        if symmetric:
+            u, v, w = cls._sym(u, v, w)
+        return cls(reweight_src=u, reweight_dst=v, reweight_weight=w)
+
+    @classmethod
+    def deletes(cls, u, v, *, symmetric: bool = True) -> "UpdateBatch":
+        if symmetric:
+            u, v = cls._sym(u, v)
+        return cls(delete_src=u, delete_dst=v)
+
+    @staticmethod
+    def merge(batches) -> "UpdateBatch":
+        """Concatenate several batches into one (applied in order)."""
+        batches = list(batches)
+        kw = {}
+        for f in dataclasses.fields(UpdateBatch):
+            kw[f.name] = np.concatenate(
+                [getattr(b, f.name) for b in batches]) if batches else _i32([])
+        return UpdateBatch(**kw)
+
+
+@dataclass
+class DynamicMetrics:
+    """Amortized-cost accounting across a session's whole update stream."""
+
+    batches: int = 0
+    inserts: int = 0          # effective new keys
+    decreases: int = 0        # weight shrank (incl. insert-on-existing)
+    increases: int = 0        # weight grew
+    deletes: int = 0
+    noop_events: int = 0      # e.g. inserting a heavier parallel edge
+    relax_batches: int = 0    # decrease-only batches (frontier relax)
+    repair_batches: int = 0   # forest recertify + confined regrow batches
+    full_rebuilds: int = 0    # rebuild_fraction exceeded
+    update_supersteps: int = 0   # EDGE sweeps: forest sweep + regrow + tighten
+    pointer_rounds: int = 0      # node-local doubling rounds (O(n) gathers,
+                                 # no edge traffic — reported separately)
+    rebuild_supersteps: int = 0  # growing steps spent inside full rebuilds
+    update_syncs: int = 0        # device->host fetches on the update path
+    store_uploads: int = 0       # full edge-array placements (build/growth)
+    store_scatters: int = 0      # in-place scatter rounds
+    baseline_supersteps: int = 0  # growing steps of the last FULL
+                                  # decomposition (the rebuild comparator)
+
+    @property
+    def amortized_supersteps(self) -> float:
+        """Update supersteps per applied batch (rebuild steps included —
+        a triggered rebuild is part of the update cost)."""
+        total = self.update_supersteps + self.rebuild_supersteps
+        return total / max(self.batches, 1)
+
+
+@dataclass
+class UpdateReport:
+    """What one ``apply_updates`` call did."""
+
+    action: str               # "noop" | "relax" | "repair" | "rebuild"
+    inserts: int
+    decreases: int
+    increases: int
+    deletes: int
+    noops: int
+    dirty_fraction: float     # retracted certificates / n (delete path)
+    supersteps: int           # edge sweeps this batch (forest+regrow+tighten)
+    pointer_rounds: int       # node-local doubling rounds this batch
+    dead_nodes: int           # certificates the witness forest could not root
+    new_singletons: int       # nodes no center could re-reach
+    cluster_set_changed: bool
+    seconds: float
+
+
+@dataclass
+class DynamicState:
+    """Per-session dynamic bookkeeping (created on first apply_updates)."""
+
+    store: EdgeStore
+    dec: Decomposition
+    metrics: DynamicMetrics = field(default_factory=DynamicMetrics)
+    # cached device quotient of (store, dec) + its fetched counters
+    dq: Optional[object] = None
+    dq_counters: Optional[Tuple[int, int, int, int]] = None
+    # center ids whose (cluster, cluster) quotient keys need recomputation
+    dirty_centers: Set[int] = field(default_factory=set)
+    quotient_stale: bool = True   # full kernel pass needed (cluster set
+                                  # changed / no cache yet)
+    # cached solve result (phi_quotient, ecc, connected, supersteps)
+    solution: Optional[Tuple[int, np.ndarray, bool, int]] = None
+
+
+# ---------------------------------------------------------------------------
+# jitted kernels: support invalidation + repair state assembly
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n", "k_rounds"))
+def _forest_repair(src, dst, w, fc, fp, *, n: int, k_rounds: int):
+    """Witness-forest recertification: ONE edge sweep + O(log n) node
+    rounds, no kill cascade.
+
+    Every non-center v picks a parent u over its in-cluster edges with
+    ``fp[u] < fp[v]`` (STRICT descent in the OLD certificates, so the
+    forest is acyclic and rooted at the fp = 0 centers), minimizing the
+    lexicographic ``(fp[u] + w, u)`` under the CURRENT weights. Pointer
+    doubling then accumulates each node's root distance along the forest:
+    the result is the weight of a REAL path in the current graph from v's
+    own center (the chain stays inside the cluster), i.e. a fresh
+    certificate — weight increases are absorbed by inflating exactly the
+    affected subtrees, with no invalidation fixpoint and no regrow.
+
+    A node is DEAD only when its chain does not reach a center (its
+    descent edge was deleted, every alternative too) or the accumulated
+    weight saturates the engine's 2^30 envelope — those go to the confined
+    regrow. Returns (alive bool [n], fp_new int32 [n]); the doubling
+    rounds are node-local O(n) gathers, NOT edge sweeps (accounted
+    separately as ``pointer_rounds``).
+    """
+    INFi = jnp.int32(2**31 - 1)
+    BIG = jnp.int32(2**30)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    is_center = fc == ids
+    adm = ((fc[src] == fc[dst]) & (fp[src] < fp[dst]) & (src != dst)
+           & (fp[src] < BIG) & (w < BIG))
+    val = jnp.where(adm, jnp.where(adm, fp[src], 0) + w, INFi)
+    v_min, parent, pw = segment_min_triple(val, src, w, dst, n)
+    has_parent = (v_min < INFi) & ~is_center
+    parent = jnp.where(has_parent, parent, ids)
+    acc = jnp.where(has_parent, pw, jnp.int32(0))
+
+    def body(_, carry):
+        par, a = carry
+        ap = a[par]
+        # saturating add: BIG - a never underflows (a >= 0), so the
+        # comparison detects a + ap >= BIG without overflowing int32
+        a2 = jnp.where((a >= BIG) | (ap >= BIG - a), BIG, a + ap)
+        return par[par], a2
+
+    parent, acc = jax.lax.fori_loop(0, k_rounds, body, (parent, acc))
+    rooted = is_center[parent] & (acc < BIG)
+    alive = is_center | (has_parent & rooted)
+    fp_new = jnp.where(is_center, jnp.int32(0),
+                       jnp.where(alive, acc, INFi))
+    return alive, fp_new
+
+
+def _repair_state(fc, fp, alive, n: int, *, confine: bool):
+    """EngineState for the repair/frontier relax: d == pathw == the current
+    certificates (INF on retracted nodes), centers frozen at 0, NO covered
+    relays (plain distance semantics — the relay/contraction machinery is a
+    per-stage construct the repair does not need).
+
+    With ``confine=True`` every ALIVE node is frozen too: alive nodes feed
+    candidates (their certificates are the sources) but only retracted
+    nodes receive, so the relax wave cannot sweep the graph — its depth is
+    the dead region's own hop depth, not the global improvement cascade's.
+    """
+    ids = jnp.arange(n, dtype=jnp.int32)
+    fc_r = jnp.where(alive, fc, INF)
+    fp_r = jnp.where(alive, fp, INF)
+    z = jnp.zeros(n, jnp.int32)
+    f = jnp.zeros(n, bool)
+    frozen = alive if confine else (fc == ids) & alive
+    return EngineState(
+        d=fp_r, c=fc_r, pathw=fp_r, final_c=fc_r, final_pathw=fp_r,
+        offset=z, covered=f, is_center=frozen,
+    )
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _finalize_repair(state: EngineState, *, n: int):
+    """Post-relax planes: unreached nodes become singleton clusters (c =
+    self, pathw = 0), mirroring Alg. 1's last line — this is what keeps
+    disconnecting deletions certified. Returns (c, pathw, n_singletons)."""
+    ids = jnp.arange(n, dtype=jnp.int32)
+    dead = state.pathw >= INF
+    c = jnp.where(dead, ids, state.c)
+    p = jnp.where(dead, jnp.int32(0), state.pathw)
+    return c, p, jnp.sum(dead).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# session plumbing
+# ---------------------------------------------------------------------------
+
+
+def _rebind_session_buffers(session, store: EdgeStore) -> None:
+    """Point the session's resident views at the store's device arrays."""
+    from repro.core.backend import SingleDeviceBackend
+
+    be = session.backend
+    if getattr(be, "kind", None) == "single":
+        be.rebind(store.src, store.dst, store.weight)
+    else:
+        # blocked (pallas) and sharded layouts cannot be scatter-updated in
+        # place; dynamic sessions run the decomposition on the flat store
+        # view instead (the same device-resident re-entry the cascade uses)
+        log.info("dynamic updates: migrating %s backend to the flat "
+                 "device store view", getattr(be, "kind", "custom"))
+        session.backend = SingleDeviceBackend.from_device(
+            session.n_nodes, store.src, store.dst, store.weight)
+    session._flat_edges = (store.src, store.dst, store.weight)
+
+
+def _full_decomposition(session) -> Decomposition:
+    """One full decomposition with the session's own defaults (the same
+    path a ClusterQuotientEstimator query takes), on the resident store."""
+    from repro.core.cluster import cluster
+
+    cfg = session.cfg
+    delta0 = session.resolve_delta_init(cfg.delta_init)
+    return cluster(
+        session.edges, session.tau, gamma=cfg.gamma, variant=cfg.variant,
+        delta_init=str(delta0), seed=cfg.seed, max_stages=cfg.max_stages,
+        max_steps_per_phase=cfg.max_steps_per_phase,
+        relax_fn=session.backend,
+    )
+
+
+def _recertify(session, dec: Decomposition) -> Tuple[Decomposition, int, int]:
+    """Reroute every certificate through the witness forest + confined
+    regrow, so each node's ``(c, pathw)`` is witnessed by an in-cluster
+    parent edge. The engine's decompositions don't guarantee that — with
+    the "stop" variant a realized path may thread through nodes whose
+    FINAL cluster differs (mid-stage reassignment races; ~20% of nodes on
+    RMAT graphs) — and the incremental repair needs forest-witnessed
+    certificates to keep later dead sets proportional to the update, not
+    the race history. Runs once at dynamic-mode entry and after every full
+    rebuild. Returns (dec, edge_sweeps, pointer_rounds)."""
+    n = session.n_nodes
+    if n == 0 or dec.final_c_dev is None:
+        return dec, 0, 0
+    src, dst, w = session.flat_device_edges()
+    rounds = int(np.ceil(np.log2(max(n, 2)))) + 1
+    alive, fp_base = _forest_repair(
+        src, dst, w, dec.final_c_dev, dec.final_pathw_dev,
+        n=n, k_rounds=rounds)
+    state = _repair_state(dec.final_c_dev, fp_base, alive, n, confine=True)
+    state, stats = session.backend.grow(
+        state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
+        jnp.int32(_REPAIR_NUM_IT), "complete")
+    c_dev, p_dev, n_single = _finalize_repair(state, n=n)
+    fc, fp, grow_steps, singles = _fetch_repair_planes(
+        c_dev, p_dev, (stats.steps, n_single))
+    if singles:
+        log.info("recertify: %d unreachable nodes became singletons", singles)
+    dec = _make_decomposition(dec, fc, fp, c_dev, p_dev, 0,
+                              dec.n_clusters + singles)
+    return dec, 1 + grow_steps, rounds
+
+
+def ensure_dynamic(session) -> DynamicState:
+    """Idempotently switch a session into dynamic mode: build the mutable
+    edge store from the resident graph (pool padding self-loops become free
+    capacity), rebind the backend to it, run the initial certified
+    decomposition that every later update repairs, and recertify it
+    through the witness forest (one-time open cost)."""
+    st = session._dynamic
+    if st is not None:
+        return st
+    session._check_open()
+    store = EdgeStore(session.edges)
+    _rebind_session_buffers(session, store)
+    # host mirror turns lazy: materialized from the store on access, and
+    # the edge COUNT tracks the store (build min-coalesces duplicates and
+    # recycles self-loops, so it may differ from the opened EdgeList's)
+    session._edges, session._edges_fn = None, store.edge_list
+    session._n_edges = store.n_edges
+    session._delta_stats = None
+    session._max_weight = None
+    dec = _full_decomposition(session)
+    st = DynamicState(store=store, dec=dec)
+    st.metrics.baseline_supersteps = dec.growing_steps
+    st.metrics.store_uploads = store.uploads
+    session._dynamic = st
+    dec, boot_sweeps, boot_rounds = _recertify(session, dec)
+    st.dec = dec
+    st.metrics.update_syncs += 1
+    log.info("dynamic mode: %d nodes, %d edges (capacity %d), baseline "
+             "decomposition %d supersteps (+%d bootstrap recertify sweeps)",
+             session.n_nodes, store.n_edges, store.capacity,
+             dec.growing_steps, boot_sweeps)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# classification + application
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Plan:
+    inserts: int = 0
+    decreases: int = 0
+    increases: int = 0
+    deletes: int = 0
+    noops: int = 0
+    touched: List[int] = field(default_factory=list)       # any change
+
+    @property
+    def has_decrease(self) -> bool:
+        return self.inserts + self.decreases > 0
+
+    @property
+    def has_increase(self) -> bool:
+        return self.increases + self.deletes > 0
+
+
+def _stage_events(store: EdgeStore, batch: UpdateBatch) -> _Plan:
+    """Validate, classify, and stage every event on the host store.
+
+    Validation runs BEFORE any mutation so a bad batch leaves the store
+    untouched (atomic per batch). Reweights and deletes refer to the
+    PRE-batch edge set; a key may appear in at most one of them per batch.
+    """
+    mutated = []
+    for u, v, kind in [
+        *((int(u), int(v), "reweight") for u, v in
+          zip(batch.reweight_src, batch.reweight_dst)),
+        *((int(u), int(v), "delete") for u, v in
+          zip(batch.delete_src, batch.delete_dst)),
+    ]:
+        store._check_endpoint(u, v)
+        if store.lookup(u, v) is None:
+            raise ValueError(f"{kind} of missing edge ({u}, {v})")
+        mutated.append((u, v))
+    if len(set(mutated)) != len(mutated):
+        raise ValueError(
+            "a directed edge key may appear in at most one reweight/delete "
+            "per batch (apply sequential changes in separate batches)")
+    for u, v in zip(batch.insert_src, batch.insert_dst):
+        store._check_endpoint(int(u), int(v))
+
+    plan = _Plan()
+    for u, v, w in zip(batch.insert_src, batch.insert_dst,
+                       batch.insert_weight):
+        u, v, w = int(u), int(v), int(w)
+        if u == v:
+            plan.noops += 1      # self-loops are inert by construction
+            continue
+        old = store.lookup(u, v)
+        if old is None:
+            store.set_edge(u, v, w)
+            plan.inserts += 1
+        elif w < old:
+            store.set_edge(u, v, w)
+            plan.decreases += 1
+        else:
+            plan.noops += 1      # min-coalesce: heavier parallel edge
+            continue
+        plan.touched += (u, v)
+    for u, v, w in zip(batch.reweight_src, batch.reweight_dst,
+                       batch.reweight_weight):
+        u, v, w = int(u), int(v), int(w)
+        old = store.lookup(u, v)
+        if w == old:
+            plan.noops += 1
+            continue
+        store.set_edge(u, v, w)
+        plan.touched += (u, v)
+        if w < old:
+            plan.decreases += 1
+        else:
+            plan.increases += 1
+    for u, v in zip(batch.delete_src, batch.delete_dst):
+        u, v = int(u), int(v)
+        store.delete_edge(u, v)
+        plan.deletes += 1
+        plan.touched += (u, v)
+    return plan
+
+
+def _fetch_repair_planes(c_dev, p_dev, scalars) -> Tuple[np.ndarray, ...]:
+    """ONE packed device->host fetch of the repaired planes + int32 stats."""
+    n = int(c_dev.shape[0])
+    packed = np.asarray(jnp.concatenate(
+        [c_dev, p_dev] + [jnp.asarray(s, jnp.int32)[None] for s in scalars]))
+    return (packed[:n], packed[n:2 * n], *map(int, packed[2 * n:]))
+
+
+def _make_decomposition(prev: Decomposition, fc, fp, fc_dev, fp_dev,
+                        steps: int, n_clusters: int) -> Decomposition:
+    return dataclasses.replace(
+        prev,
+        final_c=fc, final_pathw=fp,
+        radius=int(fp.max()) if len(fp) else 0,
+        n_clusters=n_clusters,
+        growing_steps=prev.growing_steps + steps,
+        final_c_dev=fc_dev, final_pathw_dev=fp_dev,
+        metrics=None,
+    )
+
+
+def apply_updates(session, batch: UpdateBatch, *,
+                  tighten_cap: Optional[int] = DEFAULT_TIGHTEN_CAP,
+                  regrow_cap: Optional[int] = None) -> UpdateReport:
+    """Apply one ``UpdateBatch`` to a resident session in place.
+
+    See the module docstring for the algorithm; this is the orchestration:
+    stage + scatter the buffer mutations, pick the repair strategy from the
+    event mix and the dirty fraction, repair the decomposition on device,
+    and record which quotient keys the next ``estimate()`` must refresh.
+
+    ``tighten_cap`` bounds the insert/decrease tightening relax (None =
+    run to fixpoint, 0 = skip). ``regrow_cap`` bounds the confined regrow
+    the same way: dead nodes the capped wave does not reach become
+    singleton clusters — Alg. 1's own treatment of uncovered nodes — so a
+    serving deployment gets a HARD per-batch superstep bound; the quality
+    debt (extra clusters, looser quotient) is certified and paid back by
+    the next full rebuild. Both caps keep every bound certified.
+    """
+    session._check_open()
+    st = ensure_dynamic(session)
+    store, m = st.store, st.metrics
+    n = session.n_nodes
+
+    with Timer() as t:
+        plan = _stage_events(store, batch)
+        changed = plan.inserts + plan.decreases + plan.increases + plan.deletes
+        m.batches += 1
+        m.inserts += plan.inserts
+        m.decreases += plan.decreases
+        m.increases += plan.increases
+        m.deletes += plan.deletes
+        m.noop_events += plan.noops
+        if changed == 0:
+            return UpdateReport(
+                action="noop", inserts=0, decreases=0, increases=0,
+                deletes=0, noops=plan.noops, dirty_fraction=0.0,
+                supersteps=0, pointer_rounds=0, dead_nodes=0,
+                new_singletons=0, cluster_set_changed=False,
+                seconds=t.seconds)
+
+        # a scatter round produces NEW device array objects (functional
+        # update), a capacity growth a full re-upload — either way every
+        # resident view must be re-pointed at the store's current arrays
+        store.flush()
+        _rebind_session_buffers(session, store)
+        m.store_uploads = store.uploads
+        m.store_scatters = store.scatters
+        # invalidate the session's host-side caches of the mutated graph
+        # (the edge-list mirror re-materializes lazily on access; the edge
+        # COUNT must track the store NOW — the SSSP estimators derive their
+        # distance dtype from (n_edges, max_weight) on every query)
+        session._edges = None
+        session._n_edges = store.n_edges
+        session._max_weight = None
+        session._delta_stats = None
+
+        old_dec = st.dec
+        old_fc, old_fp = old_dec.final_c, old_dec.final_pathw
+        fc_dev, fp_dev = old_dec.final_c_dev, old_dec.final_pathw_dev
+        action = "relax"
+        dirty_fraction = 0.0
+        rounds = dead = singles = 0
+        steps = 0
+        alive, fp_base = None, fp_dev
+
+        if plan.has_increase:
+            # recertify through the witness forest: one edge sweep +
+            # O(log n) pointer-doubling rounds absorb every weight increase
+            # in place; only true orphans (deleted descent edges with no
+            # alternative) come out dead. The dead fraction IS the dirty
+            # region and picks repair vs full rebuild.
+            rounds = int(np.ceil(np.log2(max(n, 2)))) + 1
+            alive, fp_base = _forest_repair(
+                store.src, store.dst, store.weight, fc_dev, fp_dev,
+                n=n, k_rounds=rounds)
+            dead = int(np.asarray(jnp.sum(~alive)))
+            m.update_syncs += 1
+            m.update_supersteps += 1   # the parent-selection edge sweep
+            m.pointer_rounds += rounds
+            steps += 1
+            dirty_fraction = dead / max(n, 1)
+            action = ("rebuild" if dirty_fraction > session.rebuild_fraction
+                      else "repair")
+        if action == "rebuild":
+            dec = _full_decomposition(session)
+            m.full_rebuilds += 1
+            m.rebuild_supersteps += dec.growing_steps
+            m.baseline_supersteps = dec.growing_steps
+            # fresh decompositions are not forest-witnessed (stop-variant
+            # races) — recertify so later repairs stay incremental
+            dec, r_sweeps, r_rounds = _recertify(session, dec)
+            m.update_supersteps += r_sweeps
+            m.pointer_rounds += r_rounds
+            steps += r_sweeps
+            rounds += r_rounds
+        else:
+            grow_steps = jnp.int32(0)
+            if action == "repair":
+                # confined regrow: re-attach the retracted region from its
+                # alive boundary (runs to ITS fixpoint; the wave cannot
+                # leave the dead region, so depth = dead-region hop depth)
+                state = _repair_state(fc_dev, fp_base, alive, n,
+                                      confine=True)
+                g_cap = (jnp.int32(_REPAIR_NUM_IT) if regrow_cap is None
+                         else jnp.int32(int(regrow_cap)))
+                state, stats = session.backend.grow(
+                    state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
+                    g_cap, "complete")
+                grow_steps = stats.steps
+            else:
+                state = _repair_state(
+                    fc_dev, fp_base, jnp.ones(n, bool), n, confine=False)
+            tighten_steps = jnp.int32(0)
+            if plan.has_decrease and tighten_cap != 0:
+                # frontier tightening for inserts/decreases: a monotone
+                # relax whose EVERY prefix is certified (each improvement
+                # composes existing certificates with real edges), so the
+                # step cap bounds the update cost without giving anything
+                # up — a global rewire is tightened incrementally over the
+                # next batches (or by the next full rebuild) instead of
+                # stalling this one. tighten_cap=None runs to fixpoint.
+                cap = (jnp.int32(_REPAIR_NUM_IT) if tighten_cap is None
+                       else jnp.int32(int(tighten_cap)))
+                state = state._replace(
+                    is_center=state.pathw == jnp.int32(0))
+                state, tstats = session.backend.grow(
+                    state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
+                    cap, "complete")
+                tighten_steps = tstats.steps
+            c_dev, p_dev, n_single = _finalize_repair(state, n=n)
+            fc, fp, g_steps, t_steps, singles = _fetch_repair_planes(
+                c_dev, p_dev, (grow_steps, tighten_steps, n_single))
+            m.update_syncs += 1
+            steps += g_steps + t_steps
+            m.update_supersteps += g_steps + t_steps
+            if action == "repair":
+                m.repair_batches += 1
+            else:
+                m.relax_batches += 1
+            dec = _make_decomposition(old_dec, fc, fp, c_dev, p_dev, steps,
+                                      old_dec.n_clusters + singles)
+
+        # quotient refresh bookkeeping: which keys must be recomputed. The
+        # cluster SET only changes on a rebuild or when the repair minted
+        # singletons: a center always keeps fc == self (it is frozen in
+        # every repair/tighten relax), so no cluster can vanish, and the
+        # only way a new fc value appears is _finalize_repair's
+        # singletonization — which is exactly what ``singles`` counts.
+        cluster_set_changed = action == "rebuild" or singles > 0
+        if cluster_set_changed:
+            st.quotient_stale = True
+            st.dirty_centers.clear()
+        else:
+            moved = ((old_fc != dec.final_c)
+                     | (old_fp != dec.final_pathw))
+            touched = np.unique(np.asarray(plan.touched, np.int64))
+            dirty = set(np.unique(old_fc[moved]).tolist())
+            dirty |= set(np.unique(dec.final_c[moved]).tolist())
+            dirty |= set(np.unique(dec.final_c[touched]).tolist())
+            dirty |= set(np.unique(old_fc[touched]).tolist())
+            st.dirty_centers |= dirty
+        st.solution = None
+        st.dec = dec
+
+    log.info("update batch: %s (+%d/-%d edges, %d reweights) sweeps=%d "
+             "pointer_rounds=%d dead=%d singletons=%d dirty=%.3f in %.3fs",
+             action, plan.inserts, plan.deletes,
+             plan.decreases + plan.increases, steps, rounds, dead, singles,
+             dirty_fraction, t.seconds)
+    return UpdateReport(
+        action=action, inserts=plan.inserts, decreases=plan.decreases,
+        increases=plan.increases, deletes=plan.deletes, noops=plan.noops,
+        dirty_fraction=dirty_fraction, supersteps=steps,
+        pointer_rounds=rounds, dead_nodes=dead, new_singletons=singles,
+        cluster_set_changed=cluster_set_changed, seconds=t.seconds)
+
+
+# ---------------------------------------------------------------------------
+# the query side: certified quotient solve over the maintained state
+# ---------------------------------------------------------------------------
+
+
+def _dirty_incident_slice(store: EdgeStore, fc: np.ndarray,
+                          dirty_ids: np.ndarray):
+    """Host gather of the edges whose (cluster, cluster) key touches a dirty
+    cluster, padded to a DIRTY_EDGE_BUCKET multiple. Returns device arrays
+    (src, dst, w, mask) — a SMALL upload proportional to the dirty region,
+    not the graph."""
+    import jax.numpy as jnp
+
+    dirty = np.zeros(len(fc) + 1, bool)
+    dirty[dirty_ids] = True
+    sel = store.valid & (dirty[fc[store.h_src]] | dirty[fc[store.h_dst]])
+    idx = np.flatnonzero(sel)
+    e_pad = next_multiple(max(len(idx), 1), DIRTY_EDGE_BUCKET)
+    src = np.zeros(e_pad, np.int32)
+    dst = np.zeros(e_pad, np.int32)
+    w = np.ones(e_pad, np.int32)
+    mask = np.zeros(e_pad, bool)
+    src[: len(idx)] = store.h_src[idx]
+    dst[: len(idx)] = store.h_dst[idx]
+    w[: len(idx)] = store.h_weight[idx]
+    mask[: len(idx)] = True
+    return (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+            jnp.asarray(mask), len(idx))
+
+
+def solve_session_quotient(session, pm) -> Tuple[int, np.ndarray, bool]:
+    """(phi_quotient, eccentricities, connected) for the maintained
+    decomposition, refreshing the cached quotient incrementally: only the
+    (cluster, cluster) keys recorded dirty since the last solve are
+    recomputed through the PR 2 kernel; everything else merges from the
+    cache. Results are cached until the next update."""
+    from repro.core.quotient import (
+        build_quotient_device,
+        fetch_quotient_counters,
+        quotient_update_device,
+        solve_device_quotient,
+    )
+
+    st = session._dynamic
+    dec, store = st.dec, st.store
+    if st.solution is not None and not st.quotient_stale \
+            and not st.dirty_centers:
+        phi_q, ecc, connected, steps = st.solution
+        pm.solve_supersteps = steps
+        return phi_q, ecc, connected
+
+    n = session.n_nodes
+    if n == 0 or store.n_edges == 0:
+        k = dec.n_clusters
+        st.solution = (0, np.zeros(k, np.int64), k <= 1, 0)
+        st.quotient_stale = False
+        st.dirty_centers.clear()
+        return 0, np.zeros(k, np.int64), k <= 1
+
+    if st.dq is None or st.quotient_stale or st.dq_counters is None:
+        dq = build_quotient_device(session.edges, dec,
+                                   backend=session.backend)
+    else:
+        dirty_ids = np.fromiter(st.dirty_centers, np.int64,
+                                count=len(st.dirty_centers))
+        sub_src, sub_dst, sub_w, sub_mask, _ = _dirty_incident_slice(
+            store, dec.final_c, dirty_ids)
+        dq = quotient_update_device(
+            st.dq, st.dq_counters[1], (sub_src, sub_dst, sub_w, sub_mask),
+            dec.final_c_dev, dec.final_pathw_dev, dirty_ids, n)
+    k, mq, wmax, wsum = fetch_quotient_counters(dq)
+    pm.quotient_syncs += 1
+    pm.n_quotient_edges = mq
+    st.dq, st.dq_counters = dq, (k, mq, wmax, wsum)
+    st.quotient_stale = False
+    st.dirty_centers.clear()
+    if k <= 1:
+        st.solution = (0, np.zeros(k, np.int64), True, 0)
+        return 0, np.zeros(k, np.int64), True
+    diam, ecc, connected, steps = solve_device_quotient(dq, k, mq, wmax)
+    pm.solve_syncs += 1
+    pm.solve_supersteps = steps
+    st.solution = (diam, ecc, connected, steps)
+    return diam, ecc, connected

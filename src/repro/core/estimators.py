@@ -18,6 +18,10 @@ the same graph without re-uploading or rebuilding anything:
   * ``IntervalEstimator`` — composite: runs a panel of estimators and
     returns a certified ``[lower, upper]`` bracket (``DiameterInterval``)
     with per-estimator results and merged ``PipelineMetrics``.
+  * ``DynamicQuotientEstimator`` — the dynamic-graph subsystem's query
+    side (``core/dynamic.py``): serves the decomposition the session
+    maintains under ``apply_updates`` with incremental quotient refresh
+    and a cached solve.
 
 Every estimator surfaces the same ``connected`` flag contract: on a
 disconnected input the bounds cover only finite-distance pairs and
@@ -154,15 +158,10 @@ class DiameterEstimator(Protocol):
 def _fetch_quotient_counters(dq, pm: PipelineMetrics):
     """ONE packed fetch of the four device counters:
     (n_clusters, n_edges, max_weight, weight_sum)."""
-    import jax.numpy as jnp
-    from jax.experimental import enable_x64
+    from repro.core.quotient import fetch_quotient_counters
 
-    with enable_x64():
-        kmws = np.asarray(jnp.stack([
-            dq.n_clusters.astype(jnp.int64), dq.n_edges.astype(jnp.int64),
-            dq.max_weight, dq.weight_sum]))
     pm.quotient_syncs += 1
-    return int(kmws[0]), int(kmws[1]), int(kmws[2]), int(kmws[3])
+    return fetch_quotient_counters(dq)
 
 
 def _device_quotient_solve(edges, dec: Decomposition, backend,
@@ -426,6 +425,44 @@ class CascadeEstimator:
                                  t.seconds, extra_steps=extra)
 
 
+@dataclass
+class DynamicQuotientEstimator:
+    """Query side of the dynamic-graph subsystem (``core/dynamic.py``).
+
+    Serves the conservative upper bound ``Phi(G_C) + 2 R`` from the
+    decomposition the session MAINTAINS under ``apply_updates`` instead of
+    re-decomposing per query: the quotient is refreshed incrementally (only
+    (cluster, cluster) keys touching clusters dirtied since the last solve
+    are recomputed) and the solve result is cached until the next update —
+    so a query against an unchanged session costs ZERO device work beyond
+    the cached scalars, and a post-update query costs one dirty-slice
+    quotient pass plus the batched solve.
+
+    On a session that has never seen an update this initializes dynamic
+    mode (one full decomposition — the same work the flat pipeline's first
+    query does); the bound contract is identical to
+    ``ClusterQuotientEstimator``'s: certified upper when connected, largest
+    finite-distance pair otherwise (flagged via ``connected``).
+    """
+
+    name: ClassVar[str] = "dynamic-quotient"
+
+    def estimate(self, session: GraphSession) -> DiameterEstimate:
+        from repro.core import dynamic as dyn_mod
+
+        pm = PipelineMetrics()
+        with session.track_query(), Timer() as t:
+            st = dyn_mod.ensure_dynamic(session)
+            phi_q, ecc, connected = dyn_mod.solve_session_quotient(
+                session, pm)
+            if not connected:
+                log.warning(
+                    "graph is disconnected: phi_approx=%d only bounds "
+                    "finite-distance pairs", phi_q + 2 * st.dec.radius)
+        return _package_estimate(self.name, st.dec, phi_q, connected, pm,
+                                 ecc, t.seconds)
+
+
 # ---------------------------------------------------------------------------
 # SSSP estimators (the competitors), on the session's resident edge arrays
 # ---------------------------------------------------------------------------
@@ -575,15 +612,20 @@ class IntervalEstimator:
     the largest finite-distance pair; ``connected=False`` flags it). The
     default panel is farthest-point (whose first hop doubles as the SSSP
     2-approx upper — running ``DeltaSteppingEstimator`` too would repeat
-    that exact Bellman-Ford) plus the cluster-quotient pipeline."""
+    that exact Bellman-Ford) plus the cluster-quotient pipeline — or, on a
+    session in dynamic mode (``apply_updates``), the maintained
+    ``DynamicQuotientEstimator`` so the upper side rides the repaired
+    decomposition instead of re-decomposing."""
 
     name: ClassVar[str] = "interval"
 
     estimators: Tuple = ()
 
     def estimate(self, session: GraphSession) -> DiameterInterval:
-        panel = self.estimators or (
-            LowerBoundEstimator(), ClusterQuotientEstimator())
+        upper_est = (DynamicQuotientEstimator()
+                     if getattr(session, "_dynamic", None) is not None
+                     else ClusterQuotientEstimator())
+        panel = self.estimators or (LowerBoundEstimator(), upper_est)
         with Timer() as t:
             results: Dict[str, DiameterEstimate] = {}
             for e in panel:

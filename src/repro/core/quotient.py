@@ -162,6 +162,17 @@ def _quotient_kernel(src, dst, w, mask, final_c, final_pathw, *, n: int):
     )
 
 
+def fetch_quotient_counters(dq: DeviceQuotient) -> Tuple[int, int, int, int]:
+    """ONE packed host fetch of the four device counters:
+    ``(n_clusters, n_edges, max_weight, weight_sum)``. Callers account the
+    sync (``PipelineMetrics.quotient_syncs``) themselves."""
+    with enable_x64():
+        kmws = np.asarray(jnp.stack([
+            dq.n_clusters.astype(jnp.int64), dq.n_edges.astype(jnp.int64),
+            dq.max_weight, dq.weight_sum]))
+    return int(kmws[0]), int(kmws[1]), int(kmws[2]), int(kmws[3])
+
+
 def _flat_quotient_args(edges: EdgeList):
     """Fallback device edge arrays when the backend doesn't expose its own."""
     return (jnp.asarray(edges.src), jnp.asarray(edges.dst),
@@ -308,6 +319,84 @@ def build_quotient_from_level(level: QuotientLevel, dec: Decomposition
     with enable_x64():
         return _quotient_kernel(level.src, level.dst, level.weight, mask,
                                 fc, fp, n=level.n_nodes)
+
+
+# ---------------------------------------------------------------------------
+# incremental refresh: recompute only the keys touching dirty clusters
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _merge_quotient_kernel(cs, cd, cw, fs, fd, fw, dirty_compact, *, n: int):
+    """Merge a cached quotient's CLEAN entries with freshly recomputed
+    dirty-side entries.
+
+    ``dirty_compact`` is a bool [n] mask over compact cluster labels. Every
+    cached entry touching a dirty cluster is dropped (its contributing
+    edges, endpoint assignments, or path-weight certificates may have
+    changed); the fresh entries — produced by ``_quotient_kernel`` over
+    exactly the dirty-incident edge slice — cover all such pairs, so the
+    two sets are DISJOINT by construction and a key sort (no re-coalesce)
+    restores the ``DeviceQuotient`` sorted-key invariant. Traced under
+    enable_x64 (weights are int64).
+    """
+    drop = (dirty_compact[jnp.clip(cs, 0, n - 1)]
+            | dirty_compact[jnp.clip(cd, 0, n - 1)])
+    keep = (cw < jnp.int64(INF64)) & ~drop
+    src = jnp.concatenate([jnp.where(keep, cs, jnp.int32(n)), fs])
+    dst = jnp.concatenate([jnp.where(keep, cd, jnp.int32(n)), fd])
+    w = jnp.concatenate([jnp.where(keep, cw, jnp.int64(INF64)), fw])
+    valid = w < jnp.int64(INF64)
+    key = jnp.where(
+        valid, src.astype(jnp.int64) * (n + 1) + dst.astype(jnp.int64),
+        jnp.int64(INF64))
+    order = jnp.argsort(key)
+    src, dst, w = src[order], dst[order], w[order]
+    valid = w < jnp.int64(INF64)
+    return (src, dst, w,
+            jnp.sum(valid).astype(jnp.int32),
+            jnp.max(jnp.where(valid, w, jnp.int64(0))),
+            jnp.sum(jnp.where(valid, w, jnp.int64(0))))
+
+
+def quotient_update_device(
+    cached: DeviceQuotient,
+    m_cached: int,
+    dirty_edge_args: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    final_c_dev: jnp.ndarray,
+    final_pathw_dev: jnp.ndarray,
+    dirty_center_ids: np.ndarray,
+    n: int,
+) -> DeviceQuotient:
+    """Incremental quotient refresh (the dynamic-update fast path).
+
+    Only the (cluster, cluster) keys touching a dirty cluster are
+    recomputed: ``dirty_edge_args`` is the (small, padded) device slice of
+    edges with a dirty-cluster endpoint, run through the SAME
+    ``_quotient_kernel`` as a full build; the cached quotient contributes
+    every clean-clean pair unchanged. ONLY sound when the cluster (center)
+    set is identical to the cached build's — the compact label spaces must
+    agree — which the caller guarantees (a changed cluster set forces a
+    full rebuild of the quotient).
+    """
+    sub_src, sub_dst, sub_w, sub_mask = dirty_edge_args
+    with enable_x64():
+        fresh = _quotient_kernel(sub_src, sub_dst, sub_w, sub_mask,
+                                 final_c_dev, final_pathw_dev, n=n)
+        dirty_node = np.zeros(n + 1, bool)
+        dirty_node[np.asarray(dirty_center_ids, np.int64)] = True
+        # compact-label dirty mask: centers[i] is the i-th cluster's center
+        dirty_compact = jnp.asarray(dirty_node)[cached.centers]
+        m_pad = min(next_multiple(max(m_cached, 1), K_BUCKET * 8),
+                    int(cached.src.shape[0]))
+        src, dst, w, n_q, wmax, wsum = _merge_quotient_kernel(
+            cached.src[:m_pad], cached.dst[:m_pad], cached.weight[:m_pad],
+            fresh.src, fresh.dst, fresh.weight, dirty_compact, n=n)
+        return DeviceQuotient(
+            centers=cached.centers, src=src, dst=dst, weight=w,
+            n_clusters=cached.n_clusters, n_edges=n_q,
+            max_weight=wmax, weight_sum=wsum,
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,12 @@ the Pallas backend, a host re-blocking pass) and a cold jit-cache walk.
 ``SessionMetrics`` counts the expensive events (backend builds, edge-array
 uploads) so the serving bench can ASSERT the warm path does neither
 (recorded in ``BENCH_engine.json`` by ``benchmarks/kernel_bench.py``).
+
+Resident graphs are also MUTABLE: ``session.apply_updates(UpdateBatch)``
+absorbs edge insertions/reweights/deletions into the resident buffers in
+place and repairs the maintained decomposition by bounded incremental
+relaxation (``core/dynamic.py``); after the first update, ``estimate()``
+defaults to the maintained ``DynamicQuotientEstimator``.
 """
 from __future__ import annotations
 
@@ -47,6 +53,11 @@ EDGE_BUCKET = 256  # pooled sessions pad edge arrays to a multiple of this
 # Quotient solve budget (max clusters the batched-BF solve takes head-on);
 # above it ``CascadeEstimator`` re-enters the engine on the quotient.
 DEFAULT_TAU_SOLVE = 1024
+
+# Dynamic updates: when a delete/increase batch dirties more than this
+# fraction of the nodes (at cluster granularity), incremental repair is
+# abandoned for a full re-decomposition (see ``core/dynamic.py``).
+DEFAULT_REBUILD_FRACTION = 0.25
 
 
 def tau_for(n_nodes: int, fraction: float = 1e-3, minimum: int = 4) -> int:
@@ -89,6 +100,7 @@ class GraphSession:
         *,
         tau: Optional[int] = None,
         tau_solve: Optional[int] = None,
+        rebuild_fraction: Optional[float] = None,
         backend: Optional[RelaxBackend] = None,
         metrics: Optional[SessionMetrics] = None,
         delta_stats: Optional[Dict[str, int]] = None,
@@ -97,7 +109,11 @@ class GraphSession:
             raise ValueError(f"tau must be >= 1, got {tau}")
         if tau_solve is not None and tau_solve < 2:
             raise ValueError(f"tau_solve must be >= 2, got {tau_solve}")
-        self.edges: Optional[EdgeList] = edges
+        if rebuild_fraction is not None and not 0.0 <= rebuild_fraction <= 1.0:
+            raise ValueError(
+                f"rebuild_fraction must be in [0, 1], got {rebuild_fraction}")
+        self._edges: Optional[EdgeList] = edges
+        self._edges_fn = None  # dynamic mode: lazy host-mirror thunk
         self._n_nodes = edges.n_nodes
         self._n_edges = edges.n_edges
         # symbolic Delta_init modes pre-resolved over the REAL edges — set
@@ -120,14 +136,33 @@ class GraphSession:
         # solve budget for CascadeEstimator: quotients above this many
         # clusters get another decomposition level instead of a direct solve
         self.tau_solve = tau_solve if tau_solve is not None else DEFAULT_TAU_SOLVE
+        # dynamic updates: dirty fraction beyond which a delete/increase
+        # batch triggers a full re-decomposition instead of repair
+        self.rebuild_fraction = (rebuild_fraction
+                                 if rebuild_fraction is not None
+                                 else DEFAULT_REBUILD_FRACTION)
         self._max_weight: Optional[int] = None
         self._flat_edges: Optional[Tuple] = None
+        self._dynamic = None  # core.dynamic.DynamicState after apply_updates
         self._closed = False
         log.debug("opened session: %d nodes, %d edges, tau=%d, backend=%s",
                   edges.n_nodes, edges.n_edges, self.tau,
                   getattr(self.backend, "kind", "custom"))
 
     # -- resident buffers ---------------------------------------------------
+
+    @property
+    def edges(self) -> Optional[EdgeList]:
+        """Host edge mirror. On a dynamic session this is materialized
+        LAZILY from the device store's host buffers (a 1-edge update must
+        not pay an O(E) copy), cached until the next mutation."""
+        if self._edges is None and self._edges_fn is not None:
+            self._edges = self._edges_fn()
+        return self._edges
+
+    @edges.setter
+    def edges(self, value: Optional[EdgeList]) -> None:
+        self._edges = value
 
     @property
     def n_nodes(self) -> int:
@@ -182,13 +217,42 @@ class GraphSession:
     # -- querying -----------------------------------------------------------
 
     def estimate(self, estimator=None):
-        """Run ``estimator`` (default: the paper pipeline) on this session."""
+        """Run ``estimator`` on this session. Default: the paper pipeline
+        (``ClusterQuotientEstimator``) — or, once the session has absorbed
+        updates (``apply_updates``), the maintained
+        ``DynamicQuotientEstimator``, so post-update queries reuse the
+        repaired decomposition instead of re-decomposing."""
         self._check_open()
         if estimator is None:
-            from repro.core.estimators import ClusterQuotientEstimator
+            from repro.core.estimators import (ClusterQuotientEstimator,
+                                               DynamicQuotientEstimator)
 
-            estimator = ClusterQuotientEstimator()
+            estimator = (DynamicQuotientEstimator()
+                         if self._dynamic is not None
+                         else ClusterQuotientEstimator())
         return estimator.estimate(self)
+
+    # -- dynamic updates ----------------------------------------------------
+
+    @property
+    def dynamic(self):
+        """The session's ``DynamicState`` (None until the first
+        ``apply_updates`` / ``DynamicQuotientEstimator`` query)."""
+        return self._dynamic
+
+    def apply_updates(self, batch, **kw):
+        """Absorb an ``UpdateBatch`` into the RESIDENT graph in place:
+        scatter the edge mutations onto the device buffers and repair the
+        maintained decomposition by bounded incremental relaxation (full
+        re-decomposition only when the dirty fraction exceeds
+        ``rebuild_fraction``). Returns an ``UpdateReport``; see
+        ``core/dynamic.py`` for the algorithm and its certification
+        argument (``tighten_cap`` bounds the insert/decrease tightening
+        relax)."""
+        self._check_open()
+        from repro.core.dynamic import apply_updates
+
+        return apply_updates(self, batch, **kw)
 
     @contextlib.contextmanager
     def track_query(self):
@@ -209,12 +273,15 @@ class GraphSession:
             raise RuntimeError("session is closed")
 
     def close(self):
-        """Release the graph buffers: the device-side backend and flat
-        views AND the host edge arrays (only the scalar shape/config
-        survives, so a closed session costs nothing to keep around)."""
+        """Release the graph buffers: the device-side backend, flat views
+        and dynamic-update state AND the host edge arrays (only the scalar
+        shape/config survives, so a closed session costs nothing to keep
+        around). Idempotent; any later use raises via ``_check_open``."""
         self.backend = None
         self._flat_edges = None
-        self.edges = None
+        self._dynamic = None
+        self._edges = None
+        self._edges_fn = None
         self._closed = True
 
     def __enter__(self) -> "GraphSession":
@@ -230,14 +297,17 @@ def open_session(
     *,
     tau: Optional[int] = None,
     tau_solve: Optional[int] = None,
+    rebuild_fraction: Optional[float] = None,
     backend: Optional[RelaxBackend] = None,
     metrics: Optional[SessionMetrics] = None,
 ) -> GraphSession:
     """Open a graph once for many queries. ``backend`` passes a prebuilt
     ``RelaxBackend`` through (e.g. ``DistributedEngine.make_relax_fn()``);
     otherwise one is constructed from ``cfg.backend``. ``tau_solve`` sets
-    the session's cascade solve budget (``CascadeEstimator``)."""
+    the session's cascade solve budget (``CascadeEstimator``);
+    ``rebuild_fraction`` its dynamic-update repair-vs-rebuild threshold."""
     return GraphSession(edges, cfg, tau=tau, tau_solve=tau_solve,
+                        rebuild_fraction=rebuild_fraction,
                         backend=backend, metrics=metrics)
 
 
@@ -287,14 +357,21 @@ class SessionPool:
 
     def __init__(self, cfg: Optional[GraphEngineConfig] = None,
                  edge_bucket: int = EDGE_BUCKET,
-                 tau_solve: Optional[int] = None):
+                 tau_solve: Optional[int] = None,
+                 rebuild_fraction: Optional[float] = None):
         if tau_solve is not None and tau_solve < 2:
             raise ValueError(f"tau_solve must be >= 2, got {tau_solve}")
         self.cfg = cfg or GraphEngineConfig()
         self.edge_bucket = edge_bucket
         self.tau_solve = tau_solve
+        self.rebuild_fraction = rebuild_fraction
         self.metrics = SessionMetrics()
         self.sessions: List[GraphSession] = []
+        self._closed = False
+
+    def _check_open(self):
+        if self._closed:
+            raise RuntimeError("session pool is closed")
 
     def _make_session(self, edges: EdgeList, tau: Optional[int],
                       e_pad: Optional[int]) -> GraphSession:
@@ -311,11 +388,13 @@ class SessionPool:
         e_pad = e_pad or next_multiple(max(edges.n_edges, 1), self.edge_bucket)
         return GraphSession(_pad_edges(edges, e_pad), gcfg, tau=tau,
                             tau_solve=self.tau_solve,
+                            rebuild_fraction=self.rebuild_fraction,
                             metrics=self.metrics, delta_stats=stats)
 
     def open(self, edges: EdgeList, *, tau: Optional[int] = None,
              e_pad: Optional[int] = None) -> GraphSession:
         """Open a RESIDENT session (tracked until ``pool.close()``)."""
+        self._check_open()
         sess = self._make_session(edges, tau, e_pad)
         self.sessions.append(sess)
         return sess
@@ -332,6 +411,7 @@ class SessionPool:
         jit cache. Keep sessions resident via ``pool.open()`` when serving
         repeat queries.
         """
+        self._check_open()
         if tau is not None and tau < 1:
             raise ValueError(f"tau must be >= 1, got {tau}")
         results: List = [None] * len(graphs)
@@ -352,9 +432,16 @@ class SessionPool:
         return results
 
     def close(self):
+        """Close every pooled session and retire the pool. Idempotent —
+        repeated closes are no-ops; any later ``open``/``estimate_many``
+        (or a query on a previously pooled session) raises a clean
+        ``RuntimeError`` instead of resurrecting freed buffers."""
+        if self._closed:
+            return
         for s in self.sessions:
             s.close()
         self.sessions.clear()
+        self._closed = True
 
     def __enter__(self) -> "SessionPool":
         return self

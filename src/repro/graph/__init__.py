@@ -1,5 +1,6 @@
 from repro.graph.structures import (
     EdgeList,
+    EdgeStore,
     DeviceGraph,
     INF_I32,
     MAX_WEIGHT,
@@ -14,11 +15,13 @@ from repro.graph.generators import (
     road_like,
     social_like,
     assign_weights,
+    temporal_trace,
 )
 from repro.graph.segment_ops import segment_min_pair, relax_candidates
 
 __all__ = [
     "EdgeList",
+    "EdgeStore",
     "DeviceGraph",
     "INF_I32",
     "MAX_WEIGHT",
@@ -31,6 +34,7 @@ __all__ = [
     "random_connected",
     "social_like",
     "assign_weights",
+    "temporal_trace",
     "segment_min_pair",
     "relax_candidates",
 ]

@@ -6,10 +6,16 @@ weights = travel times), (b) SNAP social networks with synthetic weights
 bimodal weights (1e6 w.p. 0.1 else 1) for the Delta-sensitivity experiment.
 Offline we reproduce each *family* with seeded generators at configurable
 scale; DESIGN.md records this substitution.
+
+``temporal_trace`` extends the families into the DYNAMIC workload class:
+seeded batches of insert / reweight / delete events over an existing
+``EdgeList``, the one trace source shared by ``benchmarks/kernel_bench.py``
+(the "dynamic" block), ``launch/serve.py --update-trace`` replay, and
+``tests/test_dynamic.py``.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -133,6 +139,115 @@ def rmat(
 
 def social_like(n_log2: int = 14, edge_factor: int = 8, seed: int = 0, **wkw) -> EdgeList:
     return rmat(n_log2, (1 << n_log2) * edge_factor, seed=seed, **wkw)
+
+
+def temporal_trace(
+    edges: EdgeList,
+    n_batches: int,
+    *,
+    events_per_batch: int = 64,
+    p_insert: float = 0.4,
+    p_reweight: float = 0.4,
+    p_delete: float = 0.2,
+    insert_mode: str = "local",
+    seed: int = 0,
+) -> List:
+    """Seeded update-trace generator: ``n_batches`` batches of
+    insert/reweight/delete events over an evolving copy of ``edges``.
+
+    The trace is simulated on the host so every event is VALID at its
+    position in the stream (reweights/deletes name edges that exist then;
+    a key is mutated at most once per batch), and SYMMETRIC — the graphs
+    here store both directions of each undirected edge, so every event is
+    emitted for both. Weights are drawn uniformly from the input graph's
+    own [min, max] weight range, keeping the trace inside the family's
+    distribution.
+
+    ``insert_mode="local"`` splices new edges between endpoints of two
+    existing edges (the 2-hop locality of real network churn — road works,
+    social triangle closure); ``"random"`` draws uniform endpoint pairs
+    (long-range shortcuts, the adversarial case for incremental repair).
+
+    Returns a list of ``repro.core.dynamic.UpdateBatch``.
+    """
+    from repro.core.dynamic import UpdateBatch  # deferred: graph <- core cycle
+
+    if n_batches < 0:
+        raise ValueError(f"n_batches must be >= 0, got {n_batches}")
+    if insert_mode not in ("local", "random"):
+        raise ValueError(f"insert_mode must be local|random, got {insert_mode!r}")
+    p_total = p_insert + p_reweight + p_delete
+    if p_total <= 0:
+        raise ValueError("at least one event probability must be positive")
+    n = edges.n_nodes
+    if n < 2:
+        raise ValueError("temporal_trace needs a graph with >= 2 nodes")
+    r = _rng(seed)
+    # deletes/reweights are emitted for BOTH directions, so only pairs
+    # present in both are eligible (every generator family symmetrizes;
+    # one-directional strays just never get picked)
+    fwd = {(int(u), int(v)) for u, v in zip(edges.src, edges.dst) if u < v}
+    bwd = {(int(v), int(u)) for u, v in zip(edges.src, edges.dst) if u > v}
+    wmap = {}
+    for u, v, w in zip(edges.src, edges.dst, edges.weight):
+        key = (int(u), int(v)) if u < v else (int(v), int(u))
+        wmap[key] = min(int(w), wmap.get(key, int(w)))
+    live = {k: wmap[k] for k in fwd & bwd}
+    w_lo = int(edges.weight.min()) if edges.n_edges else 1
+    w_hi = int(edges.weight.max()) if edges.n_edges else 1
+
+    def draw_w(k):
+        # inclusive of the graph's own [min, max] range, never beyond it
+        # (w_lo == w_hi collapses to the constant weight)
+        return r.integers(w_lo, w_hi + 1, size=k).astype(np.int64)
+
+    batches: List = []
+    for _ in range(n_batches):
+        keys = list(live)
+        mutated = set()
+        ins, rw, dl = [], [], []
+        kinds = r.choice(3, size=events_per_batch,
+                         p=np.array([p_insert, p_reweight, p_delete]) / p_total)
+        for kind in kinds:
+            if kind == 0:
+                for _try in range(32):
+                    if insert_mode == "local" and keys:
+                        a = keys[int(r.integers(len(keys)))]
+                        b = keys[int(r.integers(len(keys)))]
+                        u, v = a[int(r.integers(2))], b[int(r.integers(2))]
+                    else:
+                        u, v = map(int, r.integers(0, n, 2))
+                    u, v = (u, v) if u < v else (v, u)
+                    if u != v and (u, v) not in live and (u, v) not in mutated:
+                        w = int(draw_w(1)[0])
+                        live[(u, v)] = w
+                        mutated.add((u, v))
+                        ins.append((u, v, w))
+                        break
+            elif not keys:
+                continue
+            else:
+                for _try in range(32):
+                    key = keys[int(r.integers(len(keys)))]
+                    if key in mutated or key not in live:
+                        continue
+                    mutated.add(key)
+                    if kind == 1:
+                        w = int(draw_w(1)[0])
+                        live[key] = w
+                        rw.append((*key, w))
+                    else:
+                        del live[key]
+                        dl.append(key)
+                    break
+        batches.append(UpdateBatch.merge([
+            UpdateBatch.inserts([e[0] for e in ins], [e[1] for e in ins],
+                                [e[2] for e in ins]),
+            UpdateBatch.reweights([e[0] for e in rw], [e[1] for e in rw],
+                                  [e[2] for e in rw]),
+            UpdateBatch.deletes([e[0] for e in dl], [e[1] for e in dl]),
+        ]))
+    return batches
 
 
 def random_connected(n: int, n_edges: int, seed: int = 0, weight_dist: str = "uniform", **wkw) -> EdgeList:

@@ -1,14 +1,19 @@
 """Batched serving driver: prefill + steady-state decode with a KV cache,
 plus a graph-analytics mode serving diameter queries through resident
 ``GraphSession``s — open each graph once, query many times with zero backend
-rebuilds and zero edge re-uploads (asserted via ``SessionMetrics``).
+rebuilds and zero edge re-uploads (asserted via ``SessionMetrics``). With
+``--update-trace`` the mode becomes a DYNAMIC replay: seeded
+``temporal_trace`` mutation batches are interleaved with the queries, every
+post-update bracket is checked, and the amortized update cost is reported
+against a full re-decomposition.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --mode graph-diameter \
       --batch 8 --graph-n 2000 --queries 3 [--graph road] [--tau 12] \
-      [--estimator cluster|sssp|lower|interval|cascade] \
+      [--estimator cluster|sssp|lower|interval|cascade|dynamic] \
       [--levels 2] [--tau-solve 64] \
+      [--update-trace 4] [--update-events 64] [--update-mix mixed] \
       [--check-amortization 2.0] [--sync-budget bench]
 """
 from __future__ import annotations
@@ -27,14 +32,26 @@ from repro.models import transformer as tf_mod
 
 log = get_logger("repro.serve")
 
-ESTIMATORS = ("cluster", "sssp", "lower", "interval", "cascade")
+ESTIMATORS = ("cluster", "sssp", "lower", "interval", "cascade", "dynamic")
+
+# update-trace event mixes: (p_insert, p_reweight, p_delete)
+UPDATE_MIXES = {"insert": (1.0, 0.0, 0.0),
+                "mixed": (0.4, 0.4, 0.2),
+                "delete": (0.1, 0.1, 0.8)}
+
+
+def _check_estimator_name(name: str) -> None:
+    if name not in ESTIMATORS:
+        raise ValueError(
+            f"unknown estimator {name!r} (expected one of {ESTIMATORS})")
 
 
 def _make_estimator(name: str, levels: int = 0):
     from repro.core import (CascadeEstimator, ClusterQuotientEstimator,
-                            DeltaSteppingEstimator, IntervalEstimator,
-                            LowerBoundEstimator)
+                            DeltaSteppingEstimator, DynamicQuotientEstimator,
+                            IntervalEstimator, LowerBoundEstimator)
 
+    _check_estimator_name(name)
     if name == "cascade":
         # --levels 0 with an explicit --estimator cascade keeps the
         # estimator's own default depth
@@ -42,15 +59,20 @@ def _make_estimator(name: str, levels: int = 0):
     return {"cluster": ClusterQuotientEstimator,
             "sssp": DeltaSteppingEstimator,
             "lower": LowerBoundEstimator,
-            "interval": IntervalEstimator}[name]()
+            "interval": IntervalEstimator,
+            "dynamic": DynamicQuotientEstimator}[name]()
 
 
 def _resolve_sync_budget(spec: str, estimator: str = "cluster"):
     """"off" -> None (disabled), "bench" -> the recorded BENCH_engine.json
     budget (the "cascade" block's when serving the cascade — its extra
     levels legitimately cost more syncs than the flat pipeline — else the
-    "pipeline" block's), anything else -> an explicit integer ceiling (0 is
-    a real ceiling — every host sync fails it — not "off")."""
+    "pipeline" block's, which also covers "dynamic": a maintained query
+    syncs strictly less than the flat pipeline), anything else -> an
+    explicit integer ceiling (0 is a real ceiling — every host sync fails
+    it — not "off"). Unknown estimator names are rejected outright instead
+    of silently falling through to the cluster default."""
+    _check_estimator_name(estimator)
     if spec == "off":
         return None
     if spec == "bench":
@@ -89,6 +111,8 @@ def serve_graph_diameter(args) -> int:
     from repro.core import DiameterInterval, SessionPool
     from repro.launch.diameter import build_graph
 
+    from repro.graph import temporal_trace
+
     graphs = [build_graph(args.graph, args.graph_n, seed=s)
               for s in range(args.batch)]
     cfg = GraphEngineConfig(backend=args.backend)
@@ -100,8 +124,22 @@ def serve_graph_diameter(args) -> int:
     elif args.levels and est_name not in ("cascade",):
         log.warning("--levels %d is ignored by --estimator %s",
                     args.levels, est_name)
+    if args.update_trace and est_name == "cluster":
+        # replaying mutations against per-query full re-decompositions
+        # would defeat the dynamic subsystem being exercised
+        log.info("--update-trace: serving through the maintained "
+                 "dynamic-quotient estimator")
+        est_name = "dynamic"
     estimator = _make_estimator(est_name, levels=args.levels)
     sync_budget = _resolve_sync_budget(args.sync_budget, est_name)
+    traces = []
+    if args.update_trace:
+        p_ins, p_rw, p_del = UPDATE_MIXES[args.update_mix]
+        events = args.update_events or max(g.n_edges // 200 for g in graphs)
+        traces = [temporal_trace(g, args.update_trace,
+                                 events_per_batch=events, p_insert=p_ins,
+                                 p_reweight=p_rw, p_delete=p_del, seed=s)
+                  for s, g in enumerate(graphs)]
 
     pool = SessionPool(cfg, tau_solve=args.tau_solve)
     # one shared edge-pad bucket across the whole batch (per-graph buckets
@@ -121,6 +159,16 @@ def serve_graph_diameter(args) -> int:
                 # build a backend or upload an edge array
                 builds0 = pool.metrics.backend_builds
                 uploads0 = pool.metrics.edge_uploads
+            if round_idx and traces:
+                # replay: one mutation batch per session between rounds
+                # (update work counts in DynamicMetrics, not the warm-query
+                # residency counters — the buffers are mutated IN PLACE)
+                for i, sess in enumerate(sessions):
+                    if round_idx - 1 < len(traces[i]):
+                        rep = sess.apply_updates(traces[i][round_idx - 1])
+                        log.info("graph[%d] u%d: %s sweeps=%d dead=%d",
+                                 i, round_idx - 1, rep.action,
+                                 rep.supersteps, rep.dead_nodes)
             for i, sess in enumerate(sessions):
                 tq = time.perf_counter()
                 res = sess.estimate(estimator)
@@ -149,6 +197,33 @@ def serve_graph_diameter(args) -> int:
                 failures.append(
                     f"warm queries must be resident: {rebuilds} rebuilds, "
                     f"{reuploads} re-uploads")
+        if traces:
+            from repro.core import IntervalEstimator
+
+            # drain any batches beyond the query rounds, then certify the
+            # final bracket of every mutated session
+            for i, sess in enumerate(sessions):
+                for b in traces[i][max(args.queries - 1, 0):]:
+                    sess.apply_updates(b)
+                iv = sess.estimate(IntervalEstimator())  # raises if inverted
+                log.info("graph[%d] final bracket [%d, %d] connected=%s",
+                         i, iv.lower, iv.upper, iv.connected)
+            dm = [s.dynamic.metrics for s in sessions]
+            upd_steps = sum(m.update_supersteps + m.rebuild_supersteps
+                            for m in dm)
+            upd_batches = sum(m.batches for m in dm)
+            baseline = max(m.baseline_supersteps for m in dm)
+            amort_upd = upd_steps / max(upd_batches, 1)
+            log.info("update replay: %d batches, %.1f supersteps/batch "
+                     "amortized vs %d for a full re-decomposition (%d "
+                     "rebuilds)", upd_batches, amort_upd, baseline,
+                     sum(m.full_rebuilds for m in dm))
+            if args.check_update_cost and baseline and \
+                    amort_upd * args.check_update_cost > baseline:
+                failures.append(
+                    f"amortized update cost {amort_upd:.1f} supersteps/batch "
+                    f"exceeds 1/{args.check_update_cost:g} of a full "
+                    f"re-decomposition ({baseline})")
         t_cold = cold[0]
         steady = (cold[1:] + warm) or [t_cold]
         per_warm = sum(steady) / len(steady)
@@ -193,6 +268,18 @@ def main() -> int:
     ap.add_argument("--queries", type=int, default=2,
                     help="diameter queries per resident session")
     ap.add_argument("--estimator", default="cluster", choices=ESTIMATORS)
+    ap.add_argument("--update-trace", type=int, default=0,
+                    help="replay this many temporal_trace mutation batches "
+                         "per session, interleaved with the query rounds "
+                         "(0 = static serving)")
+    ap.add_argument("--update-events", type=int, default=0,
+                    help="events per mutation batch (0 = ~0.5%% of edges)")
+    ap.add_argument("--update-mix", default="mixed",
+                    choices=sorted(UPDATE_MIXES))
+    ap.add_argument("--check-update-cost", type=float, default=0.0,
+                    help="fail unless amortized update supersteps stay "
+                         "below baseline/THIS (e.g. 5 = the 1/5 contract; "
+                         "0 = off)")
     ap.add_argument("--check-amortization", type=float, default=0.0,
                     help="fail unless cold/warm query amortization reaches "
                          "this ratio (0 = off)")
@@ -206,6 +293,10 @@ def main() -> int:
         ap.error("--queries must be >= 1")
     if args.batch < 1:
         ap.error("--batch must be >= 1")
+    if args.update_trace < 0:
+        ap.error("--update-trace must be >= 0")
+    if args.update_events < 0:
+        ap.error("--update-events must be >= 0")
     if args.sync_budget not in ("off", "bench"):
         try:
             int(args.sync_budget)

@@ -1,0 +1,497 @@
+"""Dynamic-graph subsystem: in-place updates on resident sessions.
+
+The load-bearing contract — after EVERY applied ``UpdateBatch`` the session
+bracket stays certified, ``lower <= scipy exact <= upper``, across
+insert-only, mixed, and delete-heavy traces (including disconnecting
+deletions) on all backends — plus the storage-layer contracts incremental
+insertion relies on (``EdgeList.coalesce``/``remove_self_loops``
+composition, ``EdgeStore`` min-coalescing and slot recycling), incremental
+quotient parity with a full recompute, rebuild_fraction behavior, and the
+serve-driver estimator-name validation.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.config.base import GraphEngineConfig
+from repro.core import (
+    ClusterQuotientEstimator,
+    DiameterEstimator,
+    DynamicQuotientEstimator,
+    IntervalEstimator,
+    LowerBoundEstimator,
+    UpdateBatch,
+    open_session,
+)
+from repro.graph import (
+    grid_mesh,
+    random_connected,
+    random_geometric,
+    temporal_trace,
+)
+from repro.graph.structures import EdgeList, EdgeStore, to_scipy_csr
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _true_diameter(edges):
+    from scipy.sparse.csgraph import shortest_path
+    d = shortest_path(to_scipy_csr(edges), method="D", directed=False)
+    fin = d[np.isfinite(d)]
+    return int(fin.max()) if len(fin) else 0
+
+
+def _undirected_pairs(edges):
+    return sorted({(int(u), int(v)) for u, v in zip(edges.src, edges.dst)
+                   if u < v})
+
+
+def _certify(sess):
+    """lower <= scipy exact <= upper on the session's CURRENT graph."""
+    iv = sess.estimate(IntervalEstimator())
+    exact = _true_diameter(sess.edges)
+    assert iv.lower <= exact <= iv.upper, (iv.lower, exact, iv.upper)
+    return iv, exact
+
+
+# ---------------------------------------------------------------------------
+# UpdateBatch semantics and validation
+# ---------------------------------------------------------------------------
+
+def test_update_batch_validation():
+    with pytest.raises(ValueError, match="length mismatch"):
+        UpdateBatch(insert_src=[0], insert_dst=[1], insert_weight=[])
+    with pytest.raises(ValueError, match=r"weights must be in \[1, 2\^30\)"):
+        UpdateBatch.inserts([0], [1], [0])
+    b = UpdateBatch.inserts([0], [1], [5])  # symmetric by default
+    assert b.n_events == 2
+    assert list(b.insert_src) == [0, 1] and list(b.insert_dst) == [1, 0]
+    assert UpdateBatch.deletes([0], [1], symmetric=False).n_events == 1
+    merged = UpdateBatch.merge([b, UpdateBatch.deletes([2], [3])])
+    assert merged.n_events == 4
+
+
+def test_update_batch_errors_leave_store_untouched():
+    g = grid_mesh(4, "unit")
+    sess = open_session(g, tau=2)
+    before = _undirected_pairs(g)
+    with pytest.raises(ValueError, match="missing edge"):
+        sess.apply_updates(UpdateBatch.deletes([0], [15]))
+    with pytest.raises(ValueError, match="missing edge"):
+        sess.apply_updates(UpdateBatch.reweights([0], [15], [3]))
+    with pytest.raises(ValueError, match="out of range"):
+        sess.apply_updates(UpdateBatch.inserts([0], [99], [3]))
+    with pytest.raises(ValueError, match="at most one reweight/delete"):
+        sess.apply_updates(UpdateBatch.merge([
+            UpdateBatch.deletes([0], [1]), UpdateBatch.reweights([0], [1], [2])]))
+    assert _undirected_pairs(sess.edges) == before  # atomic: nothing applied
+
+
+def test_insert_existing_key_keeps_minimum():
+    """Insert-on-existing follows the coalesce contract: min weight wins."""
+    g = grid_mesh(4, "uniform", high=100, seed=1)
+    sess = open_session(g, tau=2)
+    u, v = int(g.src[0]), int(g.dst[0])
+    w0 = int(g.weight[0])
+    rep = sess.apply_updates(UpdateBatch.inserts([u], [v], [w0 + 50]))
+    assert rep.action == "noop" and rep.noops == 2  # heavier parallel edge
+    store = sess.dynamic.store
+    assert store.lookup(u, v) == w0
+    rep = sess.apply_updates(UpdateBatch.inserts([u], [v], [max(w0 - 1, 1)]))
+    if w0 > 1:
+        assert rep.decreases == 2 and store.lookup(u, v) == w0 - 1
+
+
+def test_noop_batch_and_closed_session():
+    sess = open_session(grid_mesh(4, "unit"), tau=2)
+    rep = sess.apply_updates(UpdateBatch())
+    assert rep.action == "noop" and rep.supersteps == 0
+    sess.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.apply_updates(UpdateBatch())
+
+
+# ---------------------------------------------------------------------------
+# EdgeStore: the mutable storage layer
+# ---------------------------------------------------------------------------
+
+def test_edge_store_coalesces_and_recycles():
+    # duplicate (0,1) keeps min weight; self-loop dropped to free capacity
+    e = EdgeList(4, np.array([0, 0, 2, 1], np.int32),
+                 np.array([1, 1, 2, 0], np.int32),
+                 np.array([7, 3, 9, 5], np.int32))
+    store = EdgeStore(e, headroom=1.0, bucket=4)
+    assert store.n_edges == 2              # (0,1)=3 and (1,0)=5
+    assert store.lookup(0, 1) == 3 and store.lookup(1, 0) == 5
+    assert store.lookup(2, 2) is None
+    el = store.edge_list()
+    assert el.n_edges == 2 and int(el.weight.min()) == 3
+    cap0 = store.capacity
+    store.delete_edge(0, 1)
+    store.set_edge(2, 3, 8)                # reuses the freed slot
+    assert store.flush() is False          # in-place scatter, no growth
+    assert store.capacity == cap0
+    assert store.lookup(0, 1) is None and store.lookup(2, 3) == 8
+    # force growth past capacity: device arrays are replaced
+    for k in range(cap0 + 2):
+        store.set_edge(3, k % 3, 1 + k)
+    assert store.flush() is True
+    assert store.capacity > cap0 and store.uploads == 2
+
+
+# ---------------------------------------------------------------------------
+# coalesce() + remove_self_loops() composition (the insertion contract)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 12), e=st.integers(1, 40), seed=st.integers(0, 10**6))
+def test_property_coalesce_self_loop_composition(n, e, seed):
+    """Parallel edges keep the MINIMUM weight, in either composition order,
+    matching the dense min-matrix oracle — and shortest paths through the
+    coalesced graph equal scipy on the min-reduced CSR."""
+    from scipy.sparse.csgraph import shortest_path
+
+    r = np.random.default_rng(seed)
+    src = r.integers(0, n, e).astype(np.int32)
+    dst = r.integers(0, n, e).astype(np.int32)
+    w = r.integers(1, 1000, e).astype(np.int32)
+    g = EdgeList(n, src, dst, w)
+    a = g.coalesce().remove_self_loops()
+    b = g.remove_self_loops().coalesce()
+    # dense min-reduction oracle (scipy csr SUMS duplicates, so the oracle
+    # reduces first and only then builds the matrix)
+    m = np.full((n, n), np.inf)
+    np.minimum.at(m, (src, dst), w.astype(np.float64))
+    np.fill_diagonal(m, np.inf)
+    expect = {(i, j): m[i, j] for i, j in zip(*np.where(np.isfinite(m)))}
+    for el in (a, b):
+        got = {(int(u), int(v)): int(ww)
+               for u, v, ww in zip(el.src, el.dst, el.weight)}
+        assert got == expect
+    if expect:
+        d_el = shortest_path(to_scipy_csr(a), method="D", directed=False)
+        mm = np.where(np.isfinite(m), m, 0)
+        import scipy.sparse as sp
+        d_or = shortest_path(sp.csr_matrix(mm), method="D", directed=False)
+        np.testing.assert_allclose(d_el, d_or)
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance contract: certified bracket after every batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["single", "pallas"])
+@pytest.mark.parametrize("mix", [
+    dict(p_insert=1.0, p_reweight=0.0, p_delete=0.0),          # insert-only
+    dict(p_insert=0.4, p_reweight=0.4, p_delete=0.2),          # mixed
+    dict(p_insert=0.05, p_reweight=0.05, p_delete=0.9),        # delete-heavy
+])
+def test_certified_bracket_across_traces_and_backends(backend, mix):
+    g = random_geometric(260, avg_degree=3.0, seed=4)
+    sess = open_session(g, GraphEngineConfig(backend=backend), tau=4)
+    for i, b in enumerate(temporal_trace(g, 3, events_per_batch=16,
+                                         seed=11, **mix)):
+        rep = sess.apply_updates(b)
+        assert rep.action in ("noop", "relax", "repair", "rebuild")
+        _certify(sess)
+
+
+def test_disconnecting_deletions_stay_certified():
+    """Cutting the only bridge must flag connected=False while the bracket
+    still covers the largest finite-distance pair."""
+    u = np.array([0, 1, 2, 3, 4, 5, 2], np.int32)
+    v = np.array([1, 2, 0, 4, 5, 3, 3], np.int32)
+    w = np.array([5, 5, 5, 7, 7, 7, 100], np.int32)
+    g = EdgeList.from_undirected(6, u, v, w)
+    sess = open_session(g, tau=2)
+    iv0, _ = _certify(sess)
+    assert iv0.connected
+    rep = sess.apply_updates(UpdateBatch.deletes([2], [3]))
+    iv, exact = _certify(sess)
+    assert not iv.connected
+    assert iv.lower >= 1 and exact >= 7
+    # an isolated node via deletion: still certified, still disconnected
+    sess.apply_updates(UpdateBatch.deletes([0], [1]))
+    sess.apply_updates(UpdateBatch.deletes([0], [2]))
+    iv, _ = _certify(sess)
+    assert not iv.connected
+
+
+def test_certified_bracket_sharded_backend_subprocess():
+    code = textwrap.dedent("""
+    import jax, numpy as np
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    from repro.core import IntervalEstimator, open_session
+    from repro.core.distributed import DistributedEngine
+    from repro.graph import grid_mesh, temporal_trace
+    from repro.graph.structures import to_scipy_csr
+    from scipy.sparse.csgraph import shortest_path
+    g = grid_mesh(12, "uniform", high=100, seed=3)
+    be = DistributedEngine(g, mesh, comm="halo").make_relax_fn()
+    sess = open_session(g, tau=4, backend=be)
+    for b in temporal_trace(g, 2, events_per_batch=10, seed=7):
+        sess.apply_updates(b)   # migrates to the flat device store view
+        iv = sess.estimate(IntervalEstimator())
+        d = shortest_path(to_scipy_csr(sess.edges), method="D", directed=False)
+        exact = int(d[np.isfinite(d)].max())
+        assert iv.lower <= exact <= iv.upper, (iv.lower, exact, iv.upper)
+    print("DYNAMIC-SHARDED-OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DYNAMIC-SHARDED-OK" in out.stdout
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(24, 90), ef=st.integers(2, 4), seed=st.integers(0, 10**4),
+       wmax=st.sampled_from([10, 1000, 2**20]))
+def test_property_certified_bracket_under_updates(n, ef, seed, wmax):
+    g = random_connected(n, n * ef, seed=seed, weight_dist="uniform",
+                         high=wmax)
+    sess = open_session(g, tau=4)
+    for b in temporal_trace(g, 2, events_per_batch=10, p_insert=0.3,
+                            p_reweight=0.4, p_delete=0.3, seed=seed + 1):
+        sess.apply_updates(b)
+        _certify(sess)
+
+
+def test_capped_repair_stays_certified():
+    """tighten_cap/regrow_cap bound update latency; stragglers become
+    singletons and every bound stays certified. Cutting the largest
+    cluster's center out of a unit cycle makes the whole cluster interior
+    unreachable within one regrow step, forcing the singleton fallback."""
+    n = 48
+    u = np.arange(n, dtype=np.int32)
+    g = EdgeList.from_undirected(n, u, (u + 1) % n, np.ones(n, np.int32))
+    sess = open_session(g, tau=1)
+    sess.estimate(DynamicQuotientEstimator())
+    dec = sess.dynamic.dec
+    vals, counts = np.unique(dec.final_c, return_counts=True)
+    c = int(vals[counts.argmax()])
+    assert counts.max() >= 4, "need a cluster deep enough to exceed the cap"
+    rep = sess.apply_updates(
+        UpdateBatch.deletes([c, c], [(c - 1) % n, (c + 1) % n]),
+        tighten_cap=1, regrow_cap=1)
+    assert rep.action == "repair"
+    assert rep.new_singletons > 0  # the cap actually exercised the fallback
+    iv, _ = _certify(sess)
+    assert not iv.connected  # the center itself is now isolated
+
+
+def test_session_edge_caches_track_mutations():
+    """Regression: apply_updates refreshed the edges mirror and max_weight
+    but not _n_edges, so the SSSP estimators derived their distance dtype
+    from a stale (n_edges, max_weight) pair — crashing on delete-to-empty
+    and, worse, silently wrapping int32 distances (upper < exact) when
+    heavy edges were inserted into a session opened near-empty."""
+    # delete every edge: estimators must see the empty graph, not crash
+    u = np.array([0, 1], np.int32)
+    g = EdgeList.from_undirected(3, u, u + 1, np.array([5, 7], np.int32))
+    sess = open_session(g, tau=2)
+    sess.apply_updates(UpdateBatch.deletes([0, 1], [1, 2]))
+    assert sess.n_edges == 0 and sess.edges.n_edges == 0
+    iv = sess.estimate(IntervalEstimator())
+    assert not iv.connected and iv.lower == iv.upper == 0
+    # near-empty open + heavy inserts: dtype choice must see the new edges
+    heavy = 2**30 - 1
+    g2 = EdgeList.from_undirected(6, np.array([0], np.int32),
+                                  np.array([1], np.int32),
+                                  np.array([1], np.int32))
+    sess2 = open_session(g2, tau=2)
+    chain = np.arange(5, dtype=np.int32)
+    sess2.apply_updates(UpdateBatch.inserts(
+        chain, chain + 1, np.full(5, heavy, np.int32)))
+    assert sess2.max_weight == heavy and sess2.n_edges == 10
+    iv2 = sess2.estimate(IntervalEstimator())
+    exact = _true_diameter(sess2.edges)
+    assert exact == 4 * heavy + 1  # the (0,1) unit edge kept its minimum
+    assert iv2.connected and iv2.lower <= exact <= iv2.upper
+
+
+# ---------------------------------------------------------------------------
+# repaired certificates and repair accounting
+# ---------------------------------------------------------------------------
+
+def test_repaired_certificates_bound_center_distances():
+    """After delete/reweight batches every node's pathw still upper-bounds
+    its true distance to its assigned center (the invariant the 2R term of
+    the upper bound rests on)."""
+    from scipy.sparse.csgraph import shortest_path
+
+    g = random_geometric(250, avg_degree=3.0, seed=9)
+    sess = open_session(g, tau=4)
+    for b in temporal_trace(g, 3, events_per_batch=14, p_insert=0.1,
+                            p_reweight=0.4, p_delete=0.5, seed=5):
+        sess.apply_updates(b)
+        dec = sess.dynamic.dec
+        centers = np.unique(dec.final_c)
+        d = shortest_path(to_scipy_csr(sess.edges), method="D",
+                          directed=False, indices=centers)
+        row = {c: i for i, c in enumerate(centers)}
+        for v in range(g.n_nodes):
+            true = d[row[int(dec.final_c[v])], v]
+            assert np.isfinite(true), "assigned center unreachable"
+            assert dec.final_pathw[v] >= true - 1e-9
+        assert dec.radius == dec.final_pathw.max()
+
+
+def test_rebuild_fraction_controls_fallback():
+    g = random_geometric(200, avg_degree=3.0, seed=2)
+    pairs = _undirected_pairs(g)
+    # rebuild_fraction=0: ANY retracted certificate forces a full rebuild
+    sess = open_session(g, tau=4, rebuild_fraction=0.0)
+    dels = pairs[: len(pairs) // 4]
+    rep = sess.apply_updates(UpdateBatch.deletes(
+        [p[0] for p in dels], [p[1] for p in dels]))
+    assert rep.action == "rebuild"
+    assert sess.dynamic.metrics.full_rebuilds == 1
+    _certify(sess)
+    # a permissive threshold takes the incremental path on the same batch
+    sess2 = open_session(g, tau=4, rebuild_fraction=1.0)
+    rep2 = sess2.apply_updates(UpdateBatch.deletes(
+        [p[0] for p in dels], [p[1] for p in dels]))
+    assert rep2.action == "repair"
+    assert sess2.dynamic.metrics.full_rebuilds == 0
+    _certify(sess2)
+    with pytest.raises(ValueError, match="rebuild_fraction"):
+        open_session(g, rebuild_fraction=1.5)
+
+
+def test_update_metrics_accounting():
+    g = random_geometric(220, avg_degree=3.0, seed=3)
+    sess = open_session(g, tau=4)
+    sess.estimate()  # static default: full pipeline
+    trace = temporal_trace(g, 3, events_per_batch=12, seed=2)
+    for b in trace:
+        sess.apply_updates(b)
+    m = sess.dynamic.metrics
+    assert m.batches == 3
+    assert m.baseline_supersteps > 0
+    assert m.update_supersteps > 0
+    assert m.relax_batches + m.repair_batches + m.full_rebuilds <= 3
+    assert m.amortized_supersteps == pytest.approx(
+        (m.update_supersteps + m.rebuild_supersteps) / 3)
+    # post-update default estimate uses the maintained state
+    est = sess.estimate()
+    assert est.method == "dynamic-quotient"
+    # a second estimate with no interleaved update is served from cache
+    pm0 = est.pipeline.total_host_syncs
+    est2 = sess.estimate()
+    assert est2.pipeline.total_host_syncs == 0 <= pm0
+    assert est2.phi_approx == est.phi_approx
+
+
+# ---------------------------------------------------------------------------
+# incremental quotient refresh == full recompute
+# ---------------------------------------------------------------------------
+
+def test_incremental_quotient_matches_full_recompute():
+    g = random_geometric(400, avg_degree=3.0, seed=7)
+    sess = open_session(g, tau=6)
+    sess.estimate(DynamicQuotientEstimator())
+    st = sess.dynamic
+    for b in temporal_trace(g, 3, events_per_batch=10, seed=13):
+        sess.apply_updates(b)
+        if st.quotient_stale:
+            continue  # cluster set changed: full recompute is the only path
+        inc = sess.estimate(DynamicQuotientEstimator())
+        k_inc, m_inc, wmax_inc, wsum_inc = st.dq_counters
+        st.quotient_stale, st.solution, st.dq = True, None, None
+        full = sess.estimate(DynamicQuotientEstimator())
+        assert (inc.phi_approx, inc.connected) == (full.phi_approx,
+                                                   full.connected)
+        k_full, m_full, wmax_full, wsum_full = st.dq_counters
+        assert (k_inc, m_inc, wsum_inc) == (k_full, m_full, wsum_full)
+        # the full kernel records the PRE-coalesce max (conservative
+        # envelope for the int32 fast-path pick); the merge records the
+        # tighter coalesced max — both sound, merge never above full
+        assert wmax_inc <= wmax_full
+        np.testing.assert_array_equal(inc.quotient_ecc, full.quotient_ecc)
+
+
+def test_dynamic_estimator_matches_static_bound_contract():
+    """On a session with NO updates, the dynamic estimator reports the
+    maintained decomposition's certified upper bound (same contract as
+    ClusterQuotientEstimator, same quotient pipeline) without touching the
+    session's warm-query residency counters."""
+    g = random_geometric(300, avg_degree=3.0, seed=8)
+    exact = _true_diameter(g)
+    sess = open_session(g, tau=4)
+    est = sess.estimate(DynamicQuotientEstimator())
+    assert est.connected and est.upper >= exact
+    assert est.phi_approx == est.phi_quotient + 2 * est.radius
+    flat = sess.estimate(ClusterQuotientEstimator())
+    assert flat.upper >= exact
+    m = sess.metrics
+    assert m.backend_builds == 1 and m.edge_uploads == 1
+    assert isinstance(DynamicQuotientEstimator(), DiameterEstimator)
+
+
+# ---------------------------------------------------------------------------
+# temporal_trace generator
+# ---------------------------------------------------------------------------
+
+def test_temporal_trace_contract():
+    g = random_geometric(120, avg_degree=3.0, seed=1)
+    a = temporal_trace(g, 3, events_per_batch=9, seed=4)
+    b = temporal_trace(g, 3, events_per_batch=9, seed=4)
+    assert len(a) == 3
+    for x, y in zip(a, b):  # seeded determinism
+        for f in ("insert_src", "reweight_src", "delete_src",
+                  "insert_weight", "reweight_weight"):
+            np.testing.assert_array_equal(getattr(x, f), getattr(y, f))
+    wlo, whi = int(g.weight.min()), int(g.weight.max())
+    live = {(int(u), int(v)) for u, v in zip(g.src, g.dst) if u < v}
+    for batch in a:
+        assert batch.n_events > 0
+        for w in (batch.insert_weight, batch.reweight_weight):
+            if len(w):
+                assert w.min() >= wlo and w.max() <= whi
+        # replay the canonical (u<v) events against the live pair set
+        for u, v in zip(batch.insert_src, batch.insert_dst):
+            if u < v:
+                assert (int(u), int(v)) not in live
+                live.add((int(u), int(v)))
+        for u, v in zip(batch.reweight_src, batch.reweight_dst):
+            if u < v:
+                assert (int(u), int(v)) in live
+        for u, v in zip(batch.delete_src, batch.delete_dst):
+            if u < v:
+                assert (int(u), int(v)) in live
+                live.remove((int(u), int(v)))
+    with pytest.raises(ValueError, match="insert_mode"):
+        temporal_trace(g, 1, insert_mode="bogus")
+    with pytest.raises(ValueError, match="probability"):
+        temporal_trace(g, 1, p_insert=0, p_reweight=0, p_delete=0)
+    with pytest.raises(ValueError, match="n_batches"):
+        temporal_trace(g, -1)
+
+
+# ---------------------------------------------------------------------------
+# serve driver: estimator-name validation (regression)
+# ---------------------------------------------------------------------------
+
+def test_serve_rejects_unknown_estimator_names():
+    """Regression: _resolve_sync_budget quietly fell back to the cluster
+    budget for ANY unrecognized estimator name, and _make_estimator raised
+    a bare KeyError."""
+    from repro.launch.serve import _make_estimator, _resolve_sync_budget
+
+    with pytest.raises(ValueError, match="unknown estimator 'bogus'"):
+        _make_estimator("bogus")
+    with pytest.raises(ValueError, match="unknown estimator 'cluster2'"):
+        _resolve_sync_budget("off", "cluster2")
+    assert _resolve_sync_budget("off", "cluster") is None
+    assert _resolve_sync_budget("7", "dynamic") == 7
+    est = _make_estimator("dynamic")
+    assert est.name == "dynamic-quotient"

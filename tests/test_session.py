@@ -218,8 +218,38 @@ def test_delta_stepping_rejects_nonpositive_delta():
 def test_closed_session_rejects_queries():
     sess = open_session(grid_mesh(4, "unit"))
     sess.close()
+    sess.close()  # idempotent
     with pytest.raises(RuntimeError, match="closed"):
         sess.estimate(ClusterQuotientEstimator())
+
+
+def test_pool_close_idempotent_and_pooled_sessions_reject_use():
+    """Regression: SessionPool.close() must be idempotent, a closed pool
+    must refuse to open new sessions or batch-estimate (instead of quietly
+    resurrecting state), and previously pooled sessions must raise a clean
+    RuntimeError via _check_open() on ANY use after pool close."""
+    g = grid_mesh(4, "unit")
+    pool = SessionPool()
+    sess = pool.open(g, tau=2)
+    sess.estimate(ClusterQuotientEstimator())
+    pool.close()
+    pool.close()  # idempotent: second close is a no-op
+    assert pool.sessions == []
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.estimate(ClusterQuotientEstimator())
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.flat_device_edges()
+    with pytest.raises(RuntimeError, match="closed"):
+        _ = sess.max_weight
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.open(g)
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.estimate_many([g])
+    # the context-manager path closes the same way
+    with SessionPool() as pool2:
+        s2 = pool2.open(g, tau=2)
+    with pytest.raises(RuntimeError, match="closed"):
+        s2.estimate(ClusterQuotientEstimator())
 
 
 def test_tau_validation():
