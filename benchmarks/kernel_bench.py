@@ -21,6 +21,108 @@ from repro.common import bench_engine_path
 from repro.kernels.edge_relax.ops import block_edges_host, edge_relax
 
 
+def _sub_jaxprs(v):
+    from jax.core import ClosedJaxpr, Jaxpr
+    if isinstance(v, ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+def _count_eqns(jaxpr) -> int:
+    """Recursive device-op count. ``pallas_call`` counts as ONE dispatched
+    op — its kernel body runs on-chip and is exactly the work the fusion
+    removes from the XLA op stream."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        total += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                total += _count_eqns(sub)
+    return total
+
+
+def _while_body(jaxpr):
+    """The body jaxpr of the outermost while loop (the superstep loop on the
+    chained path; the kernel-launch loop on the fused path)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "while":
+            return eqn.params["body_jaxpr"].jaxpr
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                b = _while_body(sub)
+                if b is not None:
+                    return b
+    return None
+
+
+def run_kernel_fusion_bench(n: int = 1200, k_fused: int = 8, seed: int = 0):
+    """Megakernel contract, CPU-checkable half: the fused grow superstep
+    must issue STRICTLY fewer device ops than the chained (unfused) loop.
+
+    Op counts come from the traced jaxprs (one superstep = one iteration of
+    the outermost while body; the fused body covers ``k_fused`` supersteps
+    per kernel launch). Per-superstep wall times are interpret-mode numbers
+    at small n — a semantics check, not a TPU timing proxy.
+    """
+    from repro.core.backend import PallasBackend
+    from repro.graph import random_geometric
+
+    g = random_geometric(n, avg_degree=3.0, seed=seed)
+    chain = PallasBackend(g, impl="ref")
+    fused = PallasBackend(g, impl="ref", fuse=k_fused)
+    st = chain.init_state()
+    st = st._replace(d=st.d.at[0].set(0), c=st.c.at[0].set(0),
+                     pathw=st.pathw.at[0].set(0))
+    delta, half, ni = jnp.int32(300), jnp.int32(n // 2), jnp.int32(32)
+
+    def g_chain(s):
+        return chain.grow(s, delta, half, ni, "complete")
+
+    def g_fused(s):
+        return fused.grow(s, delta, half, ni, "complete")
+
+    ops_chained = _count_eqns(_while_body(jax.make_jaxpr(g_chain)(st).jaxpr))
+    ops_fused_launch = _count_eqns(
+        _while_body(jax.make_jaxpr(g_fused)(st).jaxpr))
+    ops_fused = ops_fused_launch / k_fused
+    assert ops_fused < ops_chained, (
+        f"fused superstep issues {ops_fused:.1f} device ops, chained issues "
+        f"{ops_chained} — fusion must strictly reduce the op stream")
+
+    t0 = time.perf_counter()
+    s1, st1 = g_chain(st)
+    jax.block_until_ready(s1.d)
+    dt_chain = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    s2, st2 = g_fused(st)
+    jax.block_until_ready(s2.d)
+    dt_fused = time.perf_counter() - t0
+    steps = max(int(st1.steps), 1)
+    assert int(st1.steps) == int(st2.steps)
+    np.testing.assert_array_equal(np.asarray(s1.d), np.asarray(s2.d))
+    return {
+        "graph": f"road-like-n{n}",
+        "k_fused": k_fused,
+        "device_ops_per_superstep_chained": ops_chained,
+        "device_ops_per_superstep_fused": round(ops_fused, 1),
+        "op_reduction": round(ops_chained / max(ops_fused, 1e-9), 1),
+        "supersteps": steps,
+        "kernel_launches": int(st2.kernel_launches),
+        "dead_blocks_skipped": int(st2.dead_blocks),
+        "interpret_s_per_superstep_chained": round(dt_chain / steps, 4),
+        "interpret_s_per_superstep_fused": round(dt_fused / steps, 4),
+    }
+
+
 def _time(fn, *args, reps=5):
     fn(*args)  # compile
     t0 = time.perf_counter()
@@ -264,6 +366,45 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
     # dedicated dynamic-smoke job runs run_dynamic_bench directly).
     if n >= 20_000:
         row["dynamic"] = run_dynamic_bench(n=n)
+
+    # megakernel + autotuner contract: (a) the fused superstep issues
+    # strictly fewer device ops than the chained loop (asserted inside the
+    # fusion bench), and (b) the autotuned knobs match-or-beat the fixed
+    # defaults on warm pipeline latency. The latency assert is gated at the
+    # recorded bench scale — CI smokes at n=6000 are noise-dominated.
+    kb = run_kernel_fusion_bench()
+    from repro.config.base import GraphEngineConfig
+    tuned_sess = open_session(g, GraphEngineConfig(autotune="auto"))
+    tuned_sess.estimate()                       # compile + cold query
+    t0 = time.perf_counter()
+    est_tuned = tuned_sess.estimate()
+    dt_tuned = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sess.estimate(ClusterQuotientEstimator())   # flat defaults, same warmth
+    dt_flat = time.perf_counter() - t0
+    tpm = est_tuned.pipeline
+    if n >= 20_000:
+        assert dt_tuned <= dt_flat * 1.1, (
+            f"autotuned warm query took {dt_tuned:.3f}s vs flat default "
+            f"{dt_flat:.3f}s — tuning must match-or-beat the defaults")
+        if tpm.cascade_levels:
+            assert tpm.solve_supersteps < pm.solve_supersteps, (
+                tpm.solve_supersteps, pm.solve_supersteps)
+    t = tuned_sess.tuning
+    kb["autotune"] = {
+        "tau": t.tau, "tau_solve": t.tau_solve, "levels": t.levels,
+        "delta_init": t.delta_init,
+        "node_tile": t.node_tile, "edge_block": t.edge_block,
+        "fuse": t.fuse,
+        "predicted_superstep_s": round(t.predicted_superstep_s, 6),
+        "warm_query_s_tuned": round(dt_tuned, 3),
+        "warm_query_s_default": round(dt_flat, 3),
+        "phi_approx_tuned": est_tuned.phi_approx,
+        "solve_supersteps_tuned": tpm.solve_supersteps,
+        "solve_supersteps_default": pm.solve_supersteps,
+    }
+    tuned_sess.close()
+    row["kernel"] = kb
 
     iv = sess.estimate(IntervalEstimator())
     assert iv.lower <= est.phi_approx, (iv.lower, est.phi_approx)

@@ -211,6 +211,11 @@ class GraphEngineConfig(ArchConfig):
     backend: str = "single"          # single | sharded | pallas (core/backend.py)
     comm: str = "allgather"          # sharded backend collective: allgather | halo
     relax_impl: str = "auto"         # pallas backend kernel impl: auto | ref | pallas
+    autotune: str = "off"            # off | auto | record (core/autotune.py)
+    fuse_supersteps: int = 0         # pallas megakernel fusion depth
+                                     # (0 = unfused unless the autotuner engages)
+    node_tile: int = 0               # pallas tiling overrides; 0 = kernel
+    edge_block: int = 0              # defaults (or autotuned under autotune)
 
 
 @dataclass(frozen=True)

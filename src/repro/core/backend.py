@@ -104,8 +104,13 @@ def dispatch_grow(spec: GrowSpec, graph_args, state, delta, half_target,
                               jnp.int32(delta), jnp.int32(half_target),
                               jnp.int32(num_it), n_pad, variant=variant)
     if kind == "pallas":
-        n_tiles, node_tile, edge_block, impl = spec[1:]
+        n_tiles, node_tile, edge_block, impl, fuse = spec[1:]
         bsrc, bdst, bw, bmask, btile = graph_args
+        if fuse:
+            return _megakernel_growth(state, bsrc, bdst, bw, bmask, btile,
+                                      jnp.int32(delta), jnp.int32(half_target),
+                                      jnp.int32(num_it), n_tiles, node_tile,
+                                      edge_block, impl, fuse, variant)
         return _pallas_growth(state, bsrc, bdst, bw, bmask, btile,
                               jnp.int32(delta), jnp.int32(half_target),
                               jnp.int32(num_it), n_tiles, node_tile,
@@ -208,19 +213,50 @@ def _pallas_growth(
                        variant)
 
 
+@partial(jax.jit, static_argnames=(
+    "n_tiles", "node_tile", "edge_block", "impl", "fuse", "variant"))
+def _megakernel_growth(
+    state: EngineState,
+    bsrc, bdst, bw, bmask, block_tile,
+    delta, half_target, num_it,
+    n_tiles: int, node_tile: int, edge_block: int, impl: str, fuse: int,
+    variant: str,
+):
+    """PartialGrowth where each while-body is ONE persistent fused kernel
+    running up to ``fuse`` supersteps with resident planes + on-chip stop
+    rule (``kernels/edge_relax/megakernel.py``)."""
+    from repro.kernels.edge_relax.megakernel import megakernel_growth_loop
+
+    interpret = impl != "pallas" or jax.default_backend() != "tpu"
+    return megakernel_growth_loop(
+        state, bsrc, bdst, bw, bmask, block_tile,
+        delta, half_target, num_it,
+        n_tiles, node_tile, edge_block,
+        k_fused=fuse, interpret=interpret, variant=variant)
+
+
 class PallasBackend:
-    """Blocked dst-sorted edge layout + fused one-pass relax kernel."""
+    """Blocked dst-sorted edge layout + fused one-pass relax kernel.
+
+    ``fuse > 0`` switches grow calls to the persistent megakernel: each
+    while-loop body runs up to ``fuse`` supersteps in one pallas_call with
+    VMEM-resident planes and an on-chip frontier bitmap. Off TPU the
+    megakernel runs in interpret mode (parity/testing only — slow).
+    """
 
     kind = "pallas"
 
     def __init__(self, edges: EdgeList, impl: str = "auto",
                  node_tile: Optional[int] = None,
-                 edge_block: Optional[int] = None):
-        from repro.kernels.edge_relax.kernel import EDGE_BLOCK, NODE_TILE
+                 edge_block: Optional[int] = None,
+                 fuse: int = 0):
+        from repro.kernels.edge_relax.kernel import (
+            EDGE_BLOCK, NODE_TILE, validate_tiling)
         from repro.kernels.edge_relax.ops import block_edges_host
 
         self.node_tile = node_tile or NODE_TILE
         self.edge_block = edge_block or EDGE_BLOCK
+        validate_tiling(self.node_tile, self.edge_block)
         if impl == "auto":
             impl = "pallas" if jax.default_backend() == "tpu" else "ref"
         self.impl = impl
@@ -229,6 +265,18 @@ class PallasBackend:
         self.n_nodes = edges.n_nodes
         self.n_pad = blk["n_pad_nodes"]
         self.n_tiles = blk["n_tiles"]
+        if fuse:
+            from repro.kernels.edge_relax.megakernel import fits_vmem
+            if fuse < 0:
+                raise ValueError(f"fuse must be >= 0, got {fuse}")
+            if not fits_vmem(self.n_pad, self.node_tile, self.edge_block):
+                import warnings
+                warnings.warn(
+                    f"megakernel resident planes for n_pad={self.n_pad} "
+                    "exceed the VMEM budget; falling back to the unfused "
+                    "pallas grow path", RuntimeWarning, stacklevel=2)
+                fuse = 0
+        self.fuse = int(fuse)
         self._bsrc = jnp.asarray(blk["src"])
         self._bdst = jnp.asarray(blk["dst"])
         self._bw = jnp.asarray(blk["w"])
@@ -242,7 +290,7 @@ class PallasBackend:
 
     def grow_spec(self) -> GrowSpec:
         return GrowSpec("pallas", self.n_tiles, self.node_tile,
-                        self.edge_block, self.impl)
+                        self.edge_block, self.impl, self.fuse)
 
     def graph_args(self):
         return (self._bsrc, self._bdst, self._bw, self._bmask, self._btile)
@@ -254,6 +302,13 @@ class PallasBackend:
                 self._bw.reshape(-1), self._bmask.reshape(-1).astype(bool))
 
     def grow(self, state, delta, half_target, num_it, variant):
+        if self.fuse:
+            return _megakernel_growth(
+                state, self._bsrc, self._bdst, self._bw, self._bmask,
+                self._btile, jnp.int32(delta), jnp.int32(half_target),
+                jnp.int32(num_it), self.n_tiles, self.node_tile,
+                self.edge_block, self.impl, self.fuse, variant,
+            )
         return _pallas_growth(
             state, self._bsrc, self._bdst, self._bw, self._bmask, self._btile,
             jnp.int32(delta), jnp.int32(half_target), jnp.int32(num_it),
@@ -332,14 +387,22 @@ def make_backend(
     mesh=None,
     comm: str = "allgather",
     impl: str = "auto",
+    node_tile: int = 0,
+    edge_block: int = 0,
+    fuse: int = 0,
 ) -> RelaxBackend:
-    """Resolve a backend from a config spec (or pass one through)."""
+    """Resolve a backend from a config spec (or pass one through).
+
+    ``node_tile`` / ``edge_block`` / ``fuse`` apply to the pallas kind only
+    (0 = kernel defaults / unfused); typically filled in by the autotuner.
+    """
     if not isinstance(spec, str):
         return spec  # already a RelaxBackend
     if spec in ("", "single"):
         return SingleDeviceBackend(edges)
     if spec == "pallas":
-        return PallasBackend(edges, impl=impl)
+        return PallasBackend(edges, impl=impl, node_tile=node_tile or None,
+                             edge_block=edge_block or None, fuse=fuse)
     if spec == "sharded":
         from repro.core.distributed import DistributedEngine
 

@@ -35,6 +35,10 @@ class GrowthStats(NamedTuple):
     steps: jnp.ndarray          # growing steps executed in this call
     reached: jnp.ndarray        # |{uncovered non-center: d < Delta}|
     changed_last: jnp.ndarray   # whether the final step still changed state
+    # megakernel counters (0 on the unfused paths; see edge_relax/megakernel)
+    kernel_launches: jnp.ndarray = 0    # fused pallas_call dispatches
+    kernel_supersteps: jnp.ndarray = 0  # supersteps executed inside kernels
+    dead_blocks: jnp.ndarray = 0        # frontier-skipped (DMA-stall) blocks
 
 
 def edge_candidates(

@@ -63,6 +63,10 @@ class EngineMetrics:
     resamples: int = 0        # extra center draws taken inside stages
     growing_steps: int = 0    # total supersteps (the MR-round proxy)
     finalize_syncs: int = 0   # device->host fetches of the final planes
+    # megakernel counters (0 on unfused backends)
+    kernel_launches: int = 0     # fused pallas_call dispatches
+    kernel_supersteps: int = 0   # supersteps executed inside fused kernels
+    dma_stall_blocks: int = 0    # frontier-skipped edge blocks (DMA-only)
 
 
 @dataclass
@@ -153,8 +157,9 @@ def _cluster_stage(
     backend object — so repeated decompositions of same-shaped graphs reuse
     one compiled stage program, like the seed's jitted partial_growth did.
 
-    Returns (state, delta, stats) with stats = int32 [5]:
-    (n_new, steps, grow_calls, resamples, uncovered_after).
+    Returns (state, delta, stats) with stats = int32 [8]:
+    (n_new, steps, grow_calls, resamples, uncovered_after,
+     kernel_launches, kernel_supersteps, dead_blocks).
     """
 
     def grow(st, dl, half, ni, var):
@@ -165,8 +170,10 @@ def _cluster_stage(
     mask, resamples = _sample_centers(key, p, state, n, max_resamples)
     n_new = jnp.sum(mask).astype(jnp.int32)
 
+    zero = jnp.int32(0)
+
     def barren(st):
-        return st, delta, jnp.int32(0), jnp.int32(0)
+        return st, delta, zero, zero, zero, zero, zero
 
     def run_stage(st):
         st = promote_centers(st, _pad_mask(mask, n_pad))
@@ -176,30 +183,33 @@ def _cluster_stage(
         half_target = jnp.maximum((u_count + 1) // 2 - n_new, 0)
 
         def cond(carry):
-            _, _, _, _, stop = carry
-            return ~stop
+            return ~carry[-1]
 
         def body(carry):
-            s, dl, steps, grows, _ = carry
+            s, dl, steps, grows, launches, ksteps, dead, _ = carry
             s, stats = grow(s, dl, half_target, num_it, variant)
             steps = steps + stats.steps
             grows = grows + 1
+            launches = launches + stats.kernel_launches
+            ksteps = ksteps + stats.kernel_supersteps
+            dead = dead + stats.dead_blocks
             stop = (stats.reached >= half_target) | (dl >= max_delta)
             dl = jnp.where(stop, dl, jnp.minimum(dl * 2, max_delta))
-            return (s, dl, steps, grows, stop)
+            return (s, dl, steps, grows, launches, ksteps, dead, stop)
 
-        st, dl, steps, grows, _ = jax.lax.while_loop(
+        st, dl, steps, grows, launches, ksteps, dead, _ = jax.lax.while_loop(
             cond, body,
-            (st, delta, jnp.int32(0), jnp.int32(0), jnp.bool_(False)),
+            (st, delta, zero, zero, zero, zero, zero, jnp.bool_(False)),
         )
         st = cover(st, dl)
-        return st, dl, steps, grows
+        return st, dl, steps, grows, launches, ksteps, dead
 
-    state, delta_end, steps, grows = jax.lax.cond(
+    state, delta_end, steps, grows, launches, ksteps, dead = jax.lax.cond(
         n_new > 0, run_stage, barren, state)
     stats = jnp.stack([
         n_new, steps, grows, resamples,
         uncovered_count(state).astype(jnp.int32),
+        launches, ksteps, dead,
     ])
     return state, delta_end, stats
 
@@ -214,19 +224,23 @@ def _cluster2_stage(state: EngineState, key, delta, p, num_it, graph_args,
     n_new = jnp.sum(mask).astype(jnp.int32)
 
     def barren(st):
-        return st, jnp.int32(0)
+        return st, jnp.zeros((4,), jnp.int32)
 
     def run_stage(st):
         st = promote_centers(st, _pad_mask(mask, n_pad))
         st = reset_in_stage(st)
-        st, stats = dispatch_grow(spec, graph_args, st, delta, jnp.int32(0),
-                                  num_it, "complete")
+        st, gstats = dispatch_grow(spec, graph_args, st, delta, jnp.int32(0),
+                                   num_it, "complete")
         st = cover(st, delta)
-        return st, stats.steps
+        return st, jnp.stack([
+            gstats.steps, jnp.int32(gstats.kernel_launches),
+            jnp.int32(gstats.kernel_supersteps),
+            jnp.int32(gstats.dead_blocks)])
 
-    state, steps = jax.lax.cond(n_new > 0, run_stage, barren, state)
-    stats = jnp.stack([
-        n_new, steps, uncovered_count(state).astype(jnp.int32)])
+    state, gvec = jax.lax.cond(n_new > 0, run_stage, barren, state)
+    stats = jnp.concatenate([
+        jnp.stack([n_new, gvec[0], uncovered_count(state).astype(jnp.int32)]),
+        gvec[1:]])
     return state, stats
 
 
@@ -316,10 +330,14 @@ def run_cluster(
             max_resamples=max_resamples,
         )
         # the stage's single host synchronization: the stop-decision scalars
-        n_new, steps, grows, resamples, u_host = map(int, np.asarray(stats))
+        (n_new, steps, grows, resamples, u_host,
+         launches, ksteps, dead) = map(int, np.asarray(stats))
         metrics.host_syncs += 1
         metrics.grow_calls += grows
         metrics.resamples += resamples
+        metrics.kernel_launches += launches
+        metrics.kernel_supersteps += ksteps
+        metrics.dma_stall_blocks += dead
         total_steps += steps
         stage += 1
         metrics.stages = stage
@@ -367,8 +385,12 @@ def run_cluster2(
             state, jax.random.fold_in(key, i), jnp.int32(delta),
             jnp.float32(p), num_it, graph_args, spec=spec, n=n,
         )
-        n_new, steps, u_host = map(int, np.asarray(stats))
+        (n_new, steps, u_host,
+         launches, ksteps, dead) = map(int, np.asarray(stats))
         metrics.host_syncs += 1
+        metrics.kernel_launches += launches
+        metrics.kernel_supersteps += ksteps
+        metrics.dma_stall_blocks += dead
         total_steps += steps
         metrics.stages += 1
         if n_new > 0:

@@ -104,6 +104,7 @@ class GraphSession:
         backend: Optional[RelaxBackend] = None,
         metrics: Optional[SessionMetrics] = None,
         delta_stats: Optional[Dict[str, int]] = None,
+        autotune: Optional[str] = None,
     ):
         if tau is not None and tau < 1:
             raise ValueError(f"tau must be >= 1, got {tau}")
@@ -122,20 +123,53 @@ class GraphSession:
         self.cfg = cfg or GraphEngineConfig()
         self.metrics = metrics if metrics is not None else SessionMetrics()
         self.metrics.sessions_opened += 1
+
+        # -- graph-statistics autotuner (core/autotune.py) ------------------
+        # Pin semantics: an explicit ``tau``/``tau_solve`` argument or a
+        # numeric ``delta_init`` config always wins; only symbolic/default
+        # knobs are tuned. A prebuilt ``backend`` also pins the tiling.
+        mode = autotune if autotune is not None else self.cfg.autotune
+        if mode not in ("off", "auto", "record"):
+            raise ValueError(
+                f"autotune must be off | auto | record, got {mode!r}")
+        self.tuning = None
+        if mode != "off" and edges.n_nodes > 0 and edges.n_edges > 0:
+            from repro.core.autotune import get_tuning
+
+            self.tuning = get_tuning(edges, backend=self.cfg.backend,
+                                     record=(mode == "record"))
+            if self.cfg.delta_init in ("avg", "min"):
+                self.cfg = dataclasses.replace(
+                    self.cfg, delta_init=str(self.tuning.delta_init))
+
         if backend is None:
-            backend = make_backend(edges, self.cfg.backend, comm=self.cfg.comm,
-                                   impl=self.cfg.relax_impl)
+            t = self.tuning
+            backend = make_backend(
+                edges, self.cfg.backend, comm=self.cfg.comm,
+                impl=self.cfg.relax_impl,
+                node_tile=self.cfg.node_tile or (t.node_tile if t else 0),
+                edge_block=self.cfg.edge_block or (t.edge_block if t else 0),
+                fuse=self.cfg.fuse_supersteps or (t.fuse if t else 0))
         # a prebuilt backend counts too: its construction and edge upload
         # are this session's open cost (they happened, just outside) — the
         # warm-query contract must account for them either way
         self.metrics.backend_builds += 1
         self.metrics.edge_uploads += 1
         self.backend: Optional[RelaxBackend] = backend
-        self.tau = tau if tau is not None else tau_for(
-            edges.n_nodes, self.cfg.tau_fraction)
+        if tau is not None:
+            self.tau = tau
+        elif self.tuning is not None:
+            self.tau = self.tuning.tau
+        else:
+            self.tau = tau_for(edges.n_nodes, self.cfg.tau_fraction)
         # solve budget for CascadeEstimator: quotients above this many
         # clusters get another decomposition level instead of a direct solve
-        self.tau_solve = tau_solve if tau_solve is not None else DEFAULT_TAU_SOLVE
+        if tau_solve is not None:
+            self.tau_solve = tau_solve
+        elif self.tuning is not None:
+            self.tau_solve = self.tuning.tau_solve
+        else:
+            self.tau_solve = DEFAULT_TAU_SOLVE
         # dynamic updates: dirty fraction beyond which a delete/increase
         # batch triggers a full re-decomposition instead of repair
         self.rebuild_fraction = (rebuild_fraction
@@ -221,15 +255,22 @@ class GraphSession:
         (``ClusterQuotientEstimator``) — or, once the session has absorbed
         updates (``apply_updates``), the maintained
         ``DynamicQuotientEstimator``, so post-update queries reuse the
-        repaired decomposition instead of re-decomposing."""
+        repaired decomposition instead of re-decomposing. On an autotuned
+        session whose record calls for a cascade (``tuning.levels > 0``),
+        the default becomes ``CascadeEstimator`` at that depth — the
+        solve-superstep win the tuner exists for."""
         self._check_open()
         if estimator is None:
-            from repro.core.estimators import (ClusterQuotientEstimator,
+            from repro.core.estimators import (CascadeEstimator,
+                                               ClusterQuotientEstimator,
                                                DynamicQuotientEstimator)
 
-            estimator = (DynamicQuotientEstimator()
-                         if self._dynamic is not None
-                         else ClusterQuotientEstimator())
+            if self._dynamic is not None:
+                estimator = DynamicQuotientEstimator()
+            elif self.tuning is not None and self.tuning.levels > 0:
+                estimator = CascadeEstimator(levels=self.tuning.levels)
+            else:
+                estimator = ClusterQuotientEstimator()
         return estimator.estimate(self)
 
     # -- dynamic updates ----------------------------------------------------
@@ -300,15 +341,20 @@ def open_session(
     rebuild_fraction: Optional[float] = None,
     backend: Optional[RelaxBackend] = None,
     metrics: Optional[SessionMetrics] = None,
+    autotune: Optional[str] = None,
 ) -> GraphSession:
     """Open a graph once for many queries. ``backend`` passes a prebuilt
     ``RelaxBackend`` through (e.g. ``DistributedEngine.make_relax_fn()``);
     otherwise one is constructed from ``cfg.backend``. ``tau_solve`` sets
     the session's cascade solve budget (``CascadeEstimator``);
-    ``rebuild_fraction`` its dynamic-update repair-vs-rebuild threshold."""
+    ``rebuild_fraction`` its dynamic-update repair-vs-rebuild threshold.
+    ``autotune`` ("off" | "auto" | "record") overrides ``cfg.autotune``:
+    under auto/record the session derives tau/tau_solve/delta_init/kernel
+    tiling from one device statistics pass (``core/autotune.py``), keeping
+    any knob you pass explicitly."""
     return GraphSession(edges, cfg, tau=tau, tau_solve=tau_solve,
                         rebuild_fraction=rebuild_fraction,
-                        backend=backend, metrics=metrics)
+                        backend=backend, metrics=metrics, autotune=autotune)
 
 
 # ---------------------------------------------------------------------------

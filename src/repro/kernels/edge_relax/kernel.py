@@ -39,6 +39,42 @@ NODE_TILE = 256
 EDGE_BLOCK = 512
 
 
+def validate_tiling(node_tile: int, edge_block: int) -> None:
+    """Reject tilings the kernels cannot execute correctly.
+
+    ``edge_block`` must be a positive multiple of 128 (TPU lane width: edge
+    blocks are the minor dimension of every streamed array) and ``node_tile``
+    a positive power of two (``dst // node_tile`` tile assignment and the
+    phantom-node padding in ``block_edges_host`` assume it).
+    """
+    if edge_block <= 0 or edge_block % 128 != 0:
+        raise ValueError(
+            f"edge_block must be a positive multiple of 128, got {edge_block}")
+    if node_tile <= 0 or (node_tile & (node_tile - 1)) != 0:
+        raise ValueError(
+            f"node_tile must be a positive power of two, got {node_tile}")
+
+
+def validate_block_tile(block_tile, n_tiles: int) -> None:
+    """Check a concrete block->tile map: every block owned by a valid tile,
+    and each tile's blocks CONSECUTIVE (monotone non-decreasing) — the
+    carried-partial merge in ``_relax_kernel`` revisits the same output
+    block across consecutive grid steps and would silently lose updates on
+    an interleaved map."""
+    import numpy as np
+    bt = np.asarray(block_tile)
+    if bt.ndim != 1 or bt.size == 0:
+        raise ValueError("block_tile must be a non-empty 1-D array")
+    if bt.min() < 0 or bt.max() >= n_tiles:
+        raise ValueError(
+            f"block_tile entries must be in [0, {n_tiles}), got range "
+            f"[{int(bt.min())}, {int(bt.max())}]")
+    if np.any(np.diff(bt) < 0):
+        raise ValueError(
+            "block_tile must be monotone non-decreasing: the kernel carries "
+            "each tile's partial tuple-min across consecutive edge blocks")
+
+
 def _relax_kernel(
     # scalar-prefetch
     block_tile,            # int32 [n_blocks]  node tile of each edge block
@@ -101,7 +137,7 @@ def _relax_kernel(
     jax.jit,
     static_argnames=("n_tiles", "node_tile", "edge_block", "interpret"),
 )
-def edge_relax_pallas(
+def _edge_relax_pallas_jit(
     d_src: jnp.ndarray,     # int32 [n_blocks, EDGE_BLOCK] pre-gathered planes
     c_src: jnp.ndarray,
     p_src: jnp.ndarray,
@@ -145,3 +181,26 @@ def edge_relax_pallas(
         ),
     )(block_tile, delta, d_src, c_src, p_src, rw0, rc, rp, w, dst, mask)
     return d.reshape(-1), c.reshape(-1), p.reshape(-1)
+
+
+def edge_relax_pallas(
+    d_src, c_src, p_src, rw0, rc, rp, w, dst, mask, block_tile, delta,
+    n_tiles: int,
+    node_tile: int = NODE_TILE,
+    edge_block: int = EDGE_BLOCK,
+    interpret: bool = False,
+):
+    """Validated entry point for the fused relax kernel.
+
+    Custom tilings that break the layout contract produced a silently wrong
+    answer before; now they raise. The monotone block_tile check only runs
+    on concrete (non-traced) arrays — inside a jit the map was already
+    validated when the caller built it on the host.
+    """
+    validate_tiling(node_tile, edge_block)
+    if not isinstance(block_tile, jax.core.Tracer):
+        validate_block_tile(block_tile, n_tiles)
+    return _edge_relax_pallas_jit(
+        d_src, c_src, p_src, rw0, rc, rp, w, dst, mask, block_tile, delta,
+        n_tiles, node_tile=node_tile, edge_block=edge_block,
+        interpret=interpret)

@@ -8,6 +8,7 @@ returns per-node (d_min, c_min, p_min).
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Tuple
 
@@ -26,6 +27,27 @@ from repro.kernels.edge_relax.ref import INF, edge_relax_ref
 
 def _default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+_PALLAS_FALLBACK_WARNED = False
+
+
+def _resolve_impl(impl: str) -> str:
+    """Compiled-Pallas requests off TPU fall back to the jnp reference with
+    a one-time warning instead of failing at trace time (Mosaic lowering is
+    TPU-only; single-device CI runs on CPU). ``interpret`` is always legal —
+    it IS the CPU oracle path."""
+    global _PALLAS_FALLBACK_WARNED
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        if not _PALLAS_FALLBACK_WARNED:
+            _PALLAS_FALLBACK_WARNED = True
+            warnings.warn(
+                "edge_relax: impl='pallas' requested but the default JAX "
+                "backend is not TPU; falling back to the reference "
+                "implementation (use impl='interpret' to exercise the "
+                "kernel body on CPU)", RuntimeWarning, stacklevel=3)
+        return "ref"
+    return impl
 
 
 def block_edges_host(
@@ -105,6 +127,7 @@ def edge_relax(
     impl: str = "ref",
 ):
     """One fused relaxation pass. Gathers source planes then reduces."""
+    impl = _resolve_impl(impl)
     d, c, p, rw0, rc, rp = planes
     g = lambda x: x[blocked_src]
     if impl == "pallas" or impl == "interpret":

@@ -56,6 +56,16 @@ def add_cascade_arguments(ap: argparse.ArgumentParser) -> None:
                          "DEFAULT_TAU_SOLVE")
 
 
+def add_autotune_argument(ap: argparse.ArgumentParser) -> None:
+    """The shared --autotune CLI contract (also used by launch/serve.py)."""
+    ap.add_argument("--autotune", default="off",
+                    choices=["off", "auto", "record"],
+                    help="graph-statistics autotuner (core/autotune.py): "
+                         "derive tau/tau-solve/delta-init/kernel tiling from "
+                         "one device stats pass; explicit flags stay pinned. "
+                         "'record' persists the tuning cache to JSON")
+
+
 def validate_tau(ap: argparse.ArgumentParser, tau) -> None:
     if tau is not None and tau < 1:
         ap.error(f"--tau must be >= 1 (got {tau}); omit it to use the "
@@ -88,6 +98,7 @@ def main() -> int:
     ap.add_argument("--n", type=int, default=10_000)
     add_tau_argument(ap)
     add_cascade_arguments(ap)
+    add_autotune_argument(ap)
     ap.add_argument("--variant", default="stop", choices=["stop", "complete"])
     ap.add_argument("--delta-init", default="avg")
     ap.add_argument("--cluster2", action="store_true")
@@ -132,9 +143,18 @@ def main() -> int:
     # single/pallas: the session builds the backend from cfg.backend
 
     sess = open_session(g, cfg, tau=args.tau, tau_solve=args.tau_solve,
-                        backend=backend)
-    estimator = (CascadeEstimator(levels=args.levels) if args.levels
-                 else ClusterQuotientEstimator())
+                        backend=backend, autotune=args.autotune)
+    if sess.tuning is not None:
+        t = sess.tuning
+        log.info("autotuned: tau=%d tau_solve=%d levels=%d delta0=%d "
+                 "tiling=(%d,%d) fuse=%d", t.tau, t.tau_solve, t.levels,
+                 t.delta_init, t.node_tile, t.edge_block, t.fuse)
+    if args.levels:
+        estimator = CascadeEstimator(levels=args.levels)
+    elif sess.tuning is not None:
+        estimator = None  # session default: tuned cascade depth
+    else:
+        estimator = ClusterQuotientEstimator()
     est = sess.estimate(estimator)
     log.info("Phi_approx = %d  (quotient %d + 2 x radius %d)  "
              "clusters=%d stages=%d growing_steps=%d connected=%s  %.2fs",

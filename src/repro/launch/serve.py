@@ -115,7 +115,7 @@ def serve_graph_diameter(args) -> int:
 
     graphs = [build_graph(args.graph, args.graph_n, seed=s)
               for s in range(args.batch)]
-    cfg = GraphEngineConfig(backend=args.backend)
+    cfg = GraphEngineConfig(backend=args.backend, autotune=args.autotune)
     # --levels alone activates the cascade (same contract as
     # launch/diameter.py); other estimators don't take levels
     est_name = args.estimator
@@ -256,13 +256,15 @@ def main() -> int:
     # graph-diameter mode
     ap.add_argument("--graph", default="road",
                     choices=["road", "social", "mesh"])
-    from repro.launch.diameter import (add_cascade_arguments,
+    from repro.launch.diameter import (add_autotune_argument,
+                                       add_cascade_arguments,
                                        add_tau_argument, validate_cascade,
                                        validate_tau)
 
     ap.add_argument("--graph-n", type=int, default=2000)
     add_tau_argument(ap)
     add_cascade_arguments(ap)
+    add_autotune_argument(ap)
     ap.add_argument("--backend", default="single",
                     choices=["single", "sharded", "pallas"])
     ap.add_argument("--queries", type=int, default=2,
