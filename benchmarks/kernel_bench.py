@@ -344,6 +344,39 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
         "seconds": round(dt_casc, 2),
     }
 
+    # one-shot exponential-shift mode (core/engine.run_oneshot): the whole
+    # decomposition is ONE jitted fixpoint. Acceptance: strictly fewer host
+    # syncs than the stage engine on the same graph/tau/seed, and the
+    # certified bracket stays valid when the pipeline's level-0
+    # decomposition runs in oneshot mode.
+    t0 = time.perf_counter()
+    dec_1 = cluster(g, tau, seed=3, mode="oneshot")
+    dt_1 = time.perf_counter() - t0
+    m1 = dec_1.metrics
+    assert m1.host_syncs < m.host_syncs, (
+        f"oneshot ran {m1.host_syncs} host syncs, stage engine ran "
+        f"{m.host_syncs} — the mode exists to beat the stage loop's syncs")
+    assert m1.host_syncs == 1 and m1.stages == 1, m1
+    assert m1.state_transfers <= 1, m1
+    iv_1 = sess.estimate(IntervalEstimator(estimators=(
+        LowerBoundEstimator(), ClusterQuotientEstimator(mode="oneshot"))))
+    assert iv_1.lower <= iv_1.upper, (iv_1.lower, iv_1.upper)
+    row["oneshot"] = {
+        "supersteps": dec_1.growing_steps,
+        "supersteps_stages": m.growing_steps,
+        "host_syncs": m1.host_syncs,
+        "host_syncs_stages": m.host_syncs,
+        "sync_reduction": round(m.host_syncs / max(m1.host_syncs, 1), 2),
+        "radius": dec_1.radius,
+        "radius_stages": dec.radius,
+        "n_clusters": dec_1.n_clusters,
+        "n_clusters_stages": dec.n_clusters,
+        "interval_lower": iv_1.lower,
+        "interval_upper": iv_1.upper,
+        "connected": iv_1.connected,
+        "seconds": round(dt_1, 2),
+    }
+
     # session serving contract: repeat queries must stay resident. (No
     # amortization ratio here — the engine bench above already compiled the
     # shared programs in-process, so the "first" query is NOT cold; the

@@ -216,6 +216,11 @@ class GraphEngineConfig(ArchConfig):
                                      # (0 = unfused unless the autotuner engages)
     node_tile: int = 0               # pallas tiling overrides; 0 = kernel
     edge_block: int = 0              # defaults (or autotuned under autotune)
+    mode: str = "stages"             # stages | oneshot | auto (core/engine.py
+                                     # decomposition modes; "auto" defers to
+                                     # the autotuning record)
+    deterministic: bool = False      # oneshot: hash-derived shifts, output
+                                     # is a seed-independent graph function
 
 
 @dataclass(frozen=True)

@@ -69,6 +69,12 @@ _CLUSTERS_PER_TAU_LOG_N = 2.2
 # up the quotient
 _HUB_SKEW = 32.0
 
+# host round-trip cost per stage-loop sync (dispatch + scalar fetch); the
+# stage engine pays one per stage, the one-shot engine one total, so mode
+# selection compares predicted_stages * this against the one-shot fixpoint's
+# extra device work (~ one wave over the hop radius at the roofline rate)
+_HOST_SYNC_S = 2e-4
+
 TUNE_EVENTS: Dict[str, int] = {"hits": 0, "misses": 0}
 
 
@@ -106,6 +112,11 @@ class TuningRecord:
     fuse: int                 # megakernel fusion depth (0 = unfused)
     predicted_superstep_s: float  # roofline estimate for one relax pass
     padded_edges: int             # edge slots after blocking at this tiling
+    # decomposition mode (core/engine.py) for sessions opened with
+    # cfg.mode="auto": "oneshot" when the predicted stage-loop sync overhead
+    # exceeds the one-shot fixpoint's superstep roofline. Appended LAST with
+    # a default so JSON caches recorded before this field load cleanly.
+    mode: str = "stages"
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
@@ -243,11 +254,23 @@ def derive_tuning(stats: GraphStats, *, backend: str = "single",
             and fits_vmem(n_pad, node_tile, edge_block)):
         fuse = DEFAULT_K_FUSED
 
+    # engine mode for cfg.mode="auto" sessions: the stage loop halves the
+    # uncovered set per stage until the 8*tau*log n threshold, so it needs
+    # ~ log2(n / threshold) stages, each costing one host round-trip; the
+    # one-shot alternative pays a single sync but its fixpoint must sweep
+    # the whole hop radius (~ sqrt(n) on the road-like graphs the paper
+    # targets) in one grow call. Pick whichever the model prices cheaper.
+    s_hat = max(1, math.ceil(math.log2(max(n / max(8.0 * tau * logn, 1.0),
+                                           2.0))))
+    hop_hat = max(int(math.sqrt(n)), 1)
+    mode = ("oneshot" if s_hat * _HOST_SYNC_S > hop_hat * pred_t
+            else "stages")
+
     return TuningRecord(
         signature=graph_signature(stats), tau=tau, tau_solve=tau_solve,
         levels=levels, delta_init=delta_init, node_tile=node_tile,
         edge_block=edge_block, fuse=fuse, predicted_superstep_s=pred_t,
-        padded_edges=padded)
+        padded_edges=padded, mode=mode)
 
 
 def validate_tuning(rec: TuningRecord, stats: GraphStats) -> None:
@@ -264,6 +287,10 @@ def validate_tuning(rec: TuningRecord, stats: GraphStats) -> None:
         raise AutotuneError(f"delta_init {rec.delta_init} outside [1, 2^30)")
     if rec.fuse < 0:
         raise AutotuneError(f"fuse must be >= 0, got {rec.fuse}")
+    if rec.mode not in ("stages", "oneshot"):
+        raise AutotuneError(
+            f"mode must be 'stages' or 'oneshot' (a record stores the "
+            f"RESOLVED mode, never 'auto'), got {rec.mode!r}")
     t, _ = _tiling_time(stats.n_nodes, stats.n_edges,
                         rec.node_tile, rec.edge_block)
     best_t = _best_tiling(stats)[2]

@@ -18,7 +18,14 @@ from typing import Optional, Union
 
 from repro.common import get_logger
 from repro.core.backend import RelaxBackend, make_backend
-from repro.core.engine import Decomposition, EngineMetrics, run_cluster, run_cluster2
+from repro.core.engine import (
+    Decomposition,
+    EngineMetrics,
+    resolve_engine_mode,
+    run_cluster,
+    run_cluster2,
+    run_oneshot,
+)
 from repro.graph.structures import EdgeList
 
 log = get_logger("repro.cluster")
@@ -65,13 +72,30 @@ def cluster(
     threshold_const: float = 8.0,
     relax_fn=None,
     backend: Union[str, RelaxBackend] = "single",
+    mode: str = "stages",
+    deterministic: bool = False,
 ) -> Decomposition:
     """Paper Algorithm 1. ``variant`` in {"stop", "complete"} (Table 2).
 
     ``backend`` selects the execution engine (see ``core/backend.py``); all
     backends produce byte-identical decompositions for a fixed seed.
+
+    ``mode`` selects the decomposition strategy ("stages" — the paper's
+    stage loop, default and byte-identical to before this knob existed —
+    or "oneshot" — MPVX exponential-shift growth, one relax fixpoint, one
+    host sync; see ``core/engine.py``). ``"auto"`` resolves to "stages"
+    here (no tuning record in scope — sessions resolve it against theirs).
+    ``deterministic`` applies to oneshot only: hash-derived shifts make the
+    output a seed-independent function of the graph.
     """
     be = _resolve_backend(edges, backend, relax_fn)
+    mode = resolve_engine_mode(mode)
+    if mode == "oneshot":
+        return run_oneshot(
+            edges, be, tau,
+            gamma=gamma, seed=seed, deterministic=deterministic,
+            max_steps_per_phase=max_steps_per_phase,
+        )
     return run_cluster(
         edges, be, tau,
         gamma=gamma, variant=variant,
@@ -98,6 +122,10 @@ def cluster2(
     with fixed growth budget Delta = 2 R_CL(tau) and center-selection
     probability doubling each stage (last stage selects everything left).
     Growth runs to quiescence each stage (PartialGrowth2).
+
+    CLUSTER2 is inherently staged (the doubling selection probability IS
+    the algorithm), so it has no one-shot mode; use ``cluster(mode=...)``
+    for mode-pluggable decomposition.
     """
     be = _resolve_backend(edges, backend, relax_fn)
     if base is None:

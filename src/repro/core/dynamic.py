@@ -368,6 +368,7 @@ def _full_decomposition(session) -> Decomposition:
         delta_init=str(delta0), seed=cfg.seed, max_stages=cfg.max_stages,
         max_steps_per_phase=cfg.max_steps_per_phase,
         relax_fn=session.backend,
+        mode=cfg.mode, deterministic=cfg.deterministic,
     )
 
 

@@ -22,13 +22,32 @@ Host-sync cost model (counted by ``EngineMetrics`` and checked by the engine
 bench): seed loop = 1 (uncovered) + 2 per grow call (steps, reached) per
 stage, plus one plane pack per grow call on the distributed path; this
 engine = 1 per stage, 1 pack total.
+
+The engine is MODE-PLUGGABLE (``DECOMPOSITION_MODES``): the shared machinery
+(center sampling, the promote/reset/grow/cover stage scaffold, grow dispatch,
+``_finalize``, metrics accounting) is common, and each mode supplies its grow
+strategy:
+
+  * ``"stages"`` — the paper's stage loop above (``run_cluster`` /
+    ``run_cluster2``), one host sync per stage;
+  * ``"oneshot"`` — MPVX exponential start times (``run_oneshot``): the full
+    center budget is drawn at once, each center starts the wave at
+    ``d = shift_max - shift_c``, and ONE relax fixpoint with the on-chip stop
+    rule resolves the shifted competition — a single host sync for the whole
+    decomposition. ``deterministic=True`` derives centers and shifts from
+    node-id hashes (Elkin–Haeupler-style deterministic LDD), making the
+    output a seed-independent function of the graph;
+  * ``"auto"`` — resolved against an autotuning record
+    (``resolve_engine_mode``): the stats pass predicts the stage count and
+    picks oneshot when the stage loop's sync overhead exceeds the fixpoint's
+    superstep roofline.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +61,7 @@ from repro.core.state import (
     cover,
     finalize_singletons,
     promote_centers,
+    promote_centers_shifted,
     reset_in_stage,
     uncovered_count,
 )
@@ -50,6 +70,26 @@ from repro.graph.structures import EdgeList
 log = get_logger("repro.engine")
 
 MAX_RESAMPLES = 8  # consecutive empty center draws tolerated inside a stage
+
+ENGINE_MODES = ("stages", "oneshot", "auto")
+
+
+def check_engine_mode(mode: str) -> None:
+    """Reject unknown engine modes with the valid names (same contract as
+    launch/serve.py's ``_check_estimator_name``)."""
+    if mode not in ENGINE_MODES:
+        raise ValueError(
+            f"unknown engine mode {mode!r} (expected one of {ENGINE_MODES})")
+
+
+def resolve_engine_mode(mode: str, tuning=None) -> str:
+    """Validate ``mode`` and resolve ``"auto"`` to a concrete mode: the
+    autotuning record's choice when one is available, else ``"stages"``
+    (the byte-identical default)."""
+    check_engine_mode(mode)
+    if mode == "auto":
+        return tuning.mode if tuning is not None else "stages"
+    return mode
 
 
 @dataclass
@@ -135,6 +175,43 @@ def _pad_mask(mask, n_pad: int):
     return jnp.concatenate([mask, jnp.zeros((n_pad - n,), bool)])
 
 
+def _pad_vec(x, n_pad: int):
+    n = x.shape[0]
+    if n_pad == n:
+        return x
+    return jnp.concatenate([x, jnp.zeros((n_pad - n,), x.dtype)])
+
+
+def _stage_scaffold(state: EngineState, mask, n_new, grow_body, barren_tail,
+                    start_d=None):
+    """The stage skeleton shared by CLUSTER, CLUSTER2 and the one-shot mode:
+    promote the sampled centers, reset the in-stage wave, run the mode's
+    grow strategy, all under one ``lax.cond`` so a barren draw (empty mask)
+    costs nothing. ``grow_body(st) -> (st, *tail)`` must return the same
+    pytree structure as ``(state,) + barren_tail``.
+
+    ``start_d`` switches to the one-shot promote (centers enter at the
+    shifted distance) and SKIPS the in-stage reset — the one-shot runs once
+    on a fresh ``init_state`` where every non-center is already unreached,
+    and a reset would zero the shifts back out.
+    """
+    n_pad = state.d.shape[0]
+
+    def barren(st):
+        return (st,) + tuple(barren_tail)
+
+    def run_stage(st):
+        if start_d is None:
+            st = promote_centers(st, _pad_mask(mask, n_pad))
+            st = reset_in_stage(st)
+        else:
+            st = promote_centers_shifted(st, _pad_mask(mask, n_pad),
+                                         _pad_vec(start_d, n_pad))
+        return grow_body(st)
+
+    return jax.lax.cond(n_new > 0, run_stage, barren, state)
+
+
 @partial(jax.jit, static_argnames=("spec", "variant", "n", "max_resamples"))
 def _cluster_stage(
     state: EngineState,
@@ -165,19 +242,13 @@ def _cluster_stage(
     def grow(st, dl, half, ni, var):
         return dispatch_grow(spec, graph_args, st, dl, half, ni, var)
 
-    n_pad = state.d.shape[0]
     p = jnp.minimum(1.0, p_scale / u_count.astype(jnp.float32))
     mask, resamples = _sample_centers(key, p, state, n, max_resamples)
     n_new = jnp.sum(mask).astype(jnp.int32)
 
     zero = jnp.int32(0)
 
-    def barren(st):
-        return st, delta, zero, zero, zero, zero, zero
-
-    def run_stage(st):
-        st = promote_centers(st, _pad_mask(mask, n_pad))
-        st = reset_in_stage(st)
+    def grow_body(st):
         # goal: half of the stage's uncovered set, counting the nodes that
         # just became centers (paper counts them inside V').
         half_target = jnp.maximum((u_count + 1) // 2 - n_new, 0)
@@ -204,8 +275,8 @@ def _cluster_stage(
         st = cover(st, dl)
         return st, dl, steps, grows, launches, ksteps, dead
 
-    state, delta_end, steps, grows, launches, ksteps, dead = jax.lax.cond(
-        n_new > 0, run_stage, barren, state)
+    state, delta_end, steps, grows, launches, ksteps, dead = _stage_scaffold(
+        state, mask, n_new, grow_body, (delta, zero, zero, zero, zero, zero))
     stats = jnp.stack([
         n_new, steps, grows, resamples,
         uncovered_count(state).astype(jnp.int32),
@@ -218,17 +289,11 @@ def _cluster_stage(
 def _cluster2_stage(state: EngineState, key, delta, p, num_it, graph_args,
                     *, spec, n: int):
     """One CLUSTER2 stage: fixed Δ budget, growth to quiescence."""
-    n_pad = state.d.shape[0]
     eligible = (~state.covered[:n]) & (~state.is_center[:n])
     mask = (jax.random.uniform(key, (n,)) < p) & eligible
     n_new = jnp.sum(mask).astype(jnp.int32)
 
-    def barren(st):
-        return st, jnp.zeros((4,), jnp.int32)
-
-    def run_stage(st):
-        st = promote_centers(st, _pad_mask(mask, n_pad))
-        st = reset_in_stage(st)
+    def grow_body(st):
         st, gstats = dispatch_grow(spec, graph_args, st, delta, jnp.int32(0),
                                    num_it, "complete")
         st = cover(st, delta)
@@ -237,7 +302,8 @@ def _cluster2_stage(state: EngineState, key, delta, p, num_it, graph_args,
             jnp.int32(gstats.kernel_supersteps),
             jnp.int32(gstats.dead_blocks)])
 
-    state, gvec = jax.lax.cond(n_new > 0, run_stage, barren, state)
+    state, gvec = _stage_scaffold(state, mask, n_new, grow_body,
+                                  (jnp.zeros((4,), jnp.int32),))
     stats = jnp.concatenate([
         jnp.stack([n_new, gvec[0], uncovered_count(state).astype(jnp.int32)]),
         gvec[1:]])
@@ -400,3 +466,167 @@ def run_cluster2(
     metrics.growing_steps = total_steps
     metrics.state_transfers = backend.transfers - transfers0
     return _finalize(state, n, int(delta), stage_count, total_steps, metrics)
+
+
+@partial(jax.jit, static_argnames=("spec", "n", "deterministic"))
+def _oneshot_stage(state: EngineState, key, p, shift_max, shift_scale,
+                   delta, num_it, graph_args, *, spec, n: int,
+                   deterministic: bool):
+    """The whole one-shot decomposition as a single device program.
+
+    Draw the full center budget at once (probability ``p`` per node), give
+    each center an exponential start shift ``s_c`` quantized to int32, and
+    start its wave at ``d = shift_max - s_c`` so larger shifts mean earlier
+    (lexicographically smaller) starts — the MPVX exponential-start-times
+    race expressed directly in the existing ``(d, c, pathw)`` tuple-min.
+    ONE ``dispatch_grow`` fixpoint (variant="complete", on-chip stop rule)
+    resolves the competition, then ``cover(Δ)`` freezes everything reached.
+
+    ``deterministic=True`` replaces ``jax.random`` with Knuth multiplicative
+    hashes of the node id, making centers and shifts a pure function of the
+    graph (seed-independent, Elkin–Haeupler style).
+
+    Returns (state, stats) with stats = int32 [6]:
+    (n_new, steps, uncovered_after, kernel_launches, kernel_supersteps,
+     dead_blocks) — read back in ONE host sync.
+    """
+    ids = jnp.arange(n, dtype=jnp.int32)
+    if deterministic:
+        h1 = ids.astype(jnp.uint32) * jnp.uint32(2654435761)
+        h2 = ids.astype(jnp.uint32) * jnp.uint32(2246822519)
+        u1 = h1.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+        u2 = (h2.astype(jnp.float32) + 0.5) * jnp.float32(2.0 ** -32)
+    else:
+        k1, k2 = jax.random.split(key)
+        u1 = jax.random.uniform(k1, (n,))
+        u2 = jnp.maximum(jax.random.uniform(k2, (n,)), jnp.float32(2.0 ** -32))
+
+    mask = u1 < p
+    # empty draw (tiny n or unlucky seed): force the argmin-u1 node so the
+    # one-shot never degenerates to an all-singleton decomposition
+    mask = jnp.where(mask.any(), mask, ids == jnp.argmin(u1).astype(jnp.int32))
+    n_new = jnp.sum(mask).astype(jnp.int32)
+
+    # exponential shift, clamped to [0, shift_max]; float32 rounding near
+    # 2^29 could overshoot, so clip AFTER the int cast too
+    shift = jnp.minimum(-jnp.log(u2) * shift_scale,
+                        shift_max.astype(jnp.float32))
+    shift_i = jnp.clip(shift.astype(jnp.int32), 0, shift_max)
+    start_d = shift_max - shift_i
+
+    def grow_body(st):
+        st, gstats = dispatch_grow(spec, graph_args, st, delta, jnp.int32(0),
+                                   num_it, "complete")
+        st = cover(st, delta)
+        return st, jnp.stack([
+            gstats.steps, jnp.int32(gstats.kernel_launches),
+            jnp.int32(gstats.kernel_supersteps),
+            jnp.int32(gstats.dead_blocks)])
+
+    state, gvec = _stage_scaffold(state, mask, n_new, grow_body,
+                                  (jnp.zeros((4,), jnp.int32),),
+                                  start_d=start_d)
+    stats = jnp.concatenate([
+        jnp.stack([n_new, gvec[0], uncovered_count(state).astype(jnp.int32)]),
+        gvec[1:]])
+    return state, stats
+
+
+def run_oneshot(
+    edges: Optional[EdgeList],
+    backend: RelaxBackend,
+    tau: int,
+    *,
+    gamma: float = 2.0,
+    seed: int = 0,
+    deterministic: bool = False,
+    max_steps_per_phase: int = 0,
+    max_delta: Optional[int] = None,
+) -> Decomposition:
+    """One-shot exponential-shift decomposition (MPVX exponential start
+    times; deterministic Elkin–Haeupler-style hashed shifts when
+    ``deterministic=True``).
+
+    The full center budget ``k ~ gamma * tau * log n`` is drawn in one go,
+    each center enters the wave at ``d = shift_max - shift_c`` (its
+    exponential start shift folded into the initial distance), and one relax
+    fixpoint with the on-chip stop rule resolves the whole race: a single
+    host synchronization for the entire decomposition, versus one per stage
+    for ``run_cluster``.
+
+    ``pathw`` still accumulates the realized path weight from the owning
+    center (centers start at ``pathw = 0``), so ``final_pathw`` remains a
+    genuine dist-upper-bound certificate and every downstream bracket
+    (quotient, cascade, interval) stays valid. Nodes the shifted waves never
+    reach within Δ become singleton clusters via ``_finalize``, same as the
+    staged engine.
+
+    Like ``run_cluster``, ``edges`` may be None for cascade levels resident
+    only as backend device arrays — ``max_delta`` must then be explicit.
+    """
+    if edges is None and max_delta is None:
+        raise ValueError("run_oneshot(edges=None) needs an explicit max_delta")
+    n = backend.n_nodes if edges is None else edges.n_nodes
+    metrics = EngineMetrics()
+    if n == 0:
+        return _empty_decomposition(0, metrics)
+    logn = max(math.log(max(n, 2)), 1.0)
+    k_target = max(gamma * tau * logn, 1.0)
+    p = jnp.float32(min(1.0, k_target / n))
+    num_it = jnp.int32(max_steps_per_phase or 4 * n)
+    if max_delta is None:
+        # Δ defaults to a few times the per-center weight share (floored at
+        # the average edge weight so typical edges stay traversable): radius
+        # is bounded by Δ, so the full weight sum — run_cluster's doubling
+        # CEILING — would be hopelessly loose as a fixed budget. Nodes no
+        # shifted wave reaches within Δ become singletons, which keeps every
+        # bracket valid whatever Δ is.
+        wsum = int(np.int64(edges.weight.astype(np.int64).sum()))
+        avg_w = wsum // max(edges.n_edges, 1)
+        max_delta = int(max(4.0 * wsum / k_target, 4.0 * avg_w)) + 1
+    max_delta = min(max(int(max_delta), 1), 2**30)
+    # shifts live in the lower half of the Δ budget: d <= shift_max + wsum
+    # < 2^31 stays int32-safe, and every center still covers radius >= Δ/2
+    shift_max = jnp.int32(max_delta // 2)
+    shift_scale = jnp.float32(
+        (max_delta // 2) / max(math.log(max(k_target, 2.0)), 1.0))
+
+    transfers0 = backend.transfers
+    state = backend.init_state()
+    spec = backend.grow_spec()
+    graph_args = backend.graph_args()
+    key = jax.random.PRNGKey(seed)
+
+    state, stats = _oneshot_stage(
+        state, key, p, shift_max, shift_scale, jnp.int32(max_delta),
+        num_it, graph_args, spec=spec, n=n, deterministic=deterministic,
+    )
+    # the decomposition's single host synchronization
+    (n_new, steps, u_host, launches, ksteps, dead) = map(int, np.asarray(stats))
+    metrics.stages = 1
+    metrics.host_syncs = 1
+    metrics.grow_calls = 1
+    metrics.growing_steps = steps
+    metrics.kernel_launches = launches
+    metrics.kernel_supersteps = ksteps
+    metrics.dma_stall_blocks = dead
+    metrics.state_transfers = backend.transfers - transfers0
+    log.info("oneshot: centers=%d steps=%d uncovered=%d deterministic=%s",
+             n_new, steps, u_host, deterministic)
+    return _finalize(state, n, int(max_delta), 1, steps, metrics)
+
+
+class DecompositionMode(NamedTuple):
+    """A pluggable decomposition strategy: shared machinery (center
+    sampling, the ``_stage_scaffold`` promote/grow/cover skeleton, grow
+    dispatch, ``_finalize``, metrics) lives above; each mode contributes its
+    runner over a built ``RelaxBackend``."""
+
+    name: str
+    runner: Callable[..., Decomposition]
+
+
+DECOMPOSITION_MODES: Dict[str, DecompositionMode] = {
+    "stages": DecompositionMode("stages", run_cluster),
+    "oneshot": DecompositionMode("oneshot", run_oneshot),
+}

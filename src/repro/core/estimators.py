@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.common import Timer, get_logger
 from repro.core.cluster import Decomposition, cluster, cluster2
+from repro.core.engine import resolve_engine_mode
 from repro.core.quotient import (
     build_quotient_device,
     build_quotient_from_level,
@@ -184,7 +185,7 @@ def _device_quotient_solve(edges, dec: Decomposition, backend,
 
 def _cascade_quotient_solve(edges, dec: Decomposition, backend,
                             pm: PipelineMetrics, cfg, tau_solve: int,
-                            max_levels: int):
+                            max_levels: int, level_mode: str = "stages"):
     """Multi-level quotient cascade (companion paper arXiv:1407.3144 applies
     the decomposition RECURSIVELY until the residual graph is small).
 
@@ -202,9 +203,14 @@ def _cascade_quotient_solve(edges, dec: Decomposition, backend,
     ``phi_quotient_tail`` is everything except level-0's ``2 R_0`` — so
     ``phi = tail + 2 * dec.radius`` holds at every level count, and a
     level-0 cascade is field-identical to the flat pipeline.
+
+    ``level_mode`` selects the decomposition mode for the RE-ENTRANT levels
+    ("stages" or "oneshot"): quotient levels are small and stage-count
+    bound, so oneshot's single-fixpoint growth often wins there even when
+    level 0 runs staged.
     """
     from repro.core.backend import SingleDeviceBackend
-    from repro.core.engine import run_cluster
+    from repro.core.engine import run_cluster, run_oneshot
 
     dq = build_quotient_device(edges, dec, backend=backend)
     if dq is None:  # no nodes or no edges: quotient is trivially empty
@@ -221,14 +227,23 @@ def _cascade_quotient_solve(edges, dec: Decomposition, backend,
         lv = quotient_as_edgelist(dq, k, m, wmax, wsum)
         be = SingleDeviceBackend.from_device(lv.n_nodes, lv.src, lv.dst,
                                              lv.weight)
-        dec_l = run_cluster(
-            None, be, tau_for(k, cfg.tau_fraction),
-            gamma=cfg.gamma, variant=cfg.variant,
-            delta0=max(lv.weight_sum // max(m, 1), 1),
-            seed=cfg.seed + level, max_stages=cfg.max_stages,
-            max_steps_per_phase=cfg.max_steps_per_phase,
-            max_delta=lv.weight_sum + 1,
-        )
+        if level_mode == "oneshot":
+            dec_l = run_oneshot(
+                None, be, tau_for(k, cfg.tau_fraction),
+                gamma=cfg.gamma, seed=cfg.seed + level,
+                deterministic=cfg.deterministic,
+                max_steps_per_phase=cfg.max_steps_per_phase,
+                max_delta=lv.weight_sum + 1,
+            )
+        else:
+            dec_l = run_cluster(
+                None, be, tau_for(k, cfg.tau_fraction),
+                gamma=cfg.gamma, variant=cfg.variant,
+                delta0=max(lv.weight_sum // max(m, 1), 1),
+                seed=cfg.seed + level, max_stages=cfg.max_stages,
+                max_steps_per_phase=cfg.max_steps_per_phase,
+                max_delta=lv.weight_sum + 1,
+            )
         scale_total *= lv.scale
         radius_tail += scale_total * 2 * dec_l.radius
         extra_steps += dec_l.growing_steps
@@ -271,9 +286,16 @@ def _resolve_query_cfg(session: GraphSession, est) -> Tuple[object, int]:
     overrides = {k: v for k, v in (
         ("variant", est.variant), ("seed", est.seed),
         ("delta_init", delta_init),
-        ("use_cluster2", est.use_cluster2)) if v is not None}
+        ("use_cluster2", est.use_cluster2),
+        ("mode", getattr(est, "mode", None))) if v is not None}
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
+    # "auto" resolves against the session's autotuning record (if any);
+    # explicit per-query "stages"/"oneshot" always wins, and bad names
+    # raise before any device work
+    mode = resolve_engine_mode(cfg.mode, session.tuning)
+    if mode != cfg.mode:
+        cfg = dataclasses.replace(cfg, mode=mode)
     tau = est.tau if est.tau is not None else session.tau
     if tau < 1:
         raise ValueError(f"tau must be >= 1, got {tau}")
@@ -295,6 +317,7 @@ def _run_decomposition(edges, backend, cfg, tau: int,
             max_stages=cfg.max_stages,
             max_steps_per_phase=cfg.max_steps_per_phase,
             relax_fn=backend,
+            mode=cfg.mode, deterministic=cfg.deterministic,
         )
     if dec.metrics is not None:
         pm.decompose_syncs = dec.metrics.host_syncs
@@ -333,10 +356,10 @@ def _package_estimate(method: str, dec: Decomposition, phi_q: int,
 class ClusterQuotientEstimator:
     """Paper pipeline: Phi_approx(G) = Phi(G_C) + 2 R (conservative upper).
 
-    ``tau``/``variant``/``seed``/``delta_init``/``use_cluster2`` override
-    the session defaults per query — the resident graph is reused, so e.g.
-    a stop-vs-complete or CLUSTER-vs-CLUSTER2 comparison costs two queries
-    on one session, not two uploads.
+    ``tau``/``variant``/``seed``/``delta_init``/``use_cluster2``/``mode``
+    override the session defaults per query — the resident graph is reused,
+    so e.g. a stop-vs-complete, CLUSTER-vs-CLUSTER2 or stages-vs-oneshot
+    comparison costs two queries on one session, not two uploads.
     ``solver="device"`` (default) runs the quotient + solve on device;
     ``solver="scipy"`` keeps the host oracle path (tests / debugging).
     """
@@ -349,6 +372,7 @@ class ClusterQuotientEstimator:
     seed: Optional[int] = None
     delta_init: Optional[str] = None
     use_cluster2: Optional[bool] = None
+    mode: Optional[str] = None       # stages | oneshot | auto (engine mode)
 
     def estimate(self, session: GraphSession) -> DiameterEstimate:
         cfg, tau = _resolve_query_cfg(session, self)
@@ -402,6 +426,9 @@ class CascadeEstimator:
     seed: Optional[int] = None
     delta_init: Optional[str] = None
     use_cluster2: Optional[bool] = None
+    mode: Optional[str] = None        # level-0 engine mode override
+    level_mode: Optional[str] = None  # mode for re-entrant quotient levels;
+                                      # None = follow the level-0 mode
 
     def estimate(self, session: GraphSession) -> DiameterEstimate:
         if self.levels < 0:
@@ -411,12 +438,16 @@ class CascadeEstimator:
         if tau_solve < 2:
             raise ValueError(f"tau_solve must be >= 2, got {tau_solve}")
         cfg, tau = _resolve_query_cfg(session, self)
+        level_mode = resolve_engine_mode(
+            self.level_mode if self.level_mode is not None else cfg.mode,
+            session.tuning)
         edges, backend = session.edges, session.backend
         pm = PipelineMetrics()
         with session.track_query(), Timer() as t:
             dec = _run_decomposition(edges, backend, cfg, tau, pm)
             phi_q, ecc, connected, extra = _cascade_quotient_solve(
-                edges, dec, backend, pm, cfg, tau_solve, self.levels)
+                edges, dec, backend, pm, cfg, tau_solve, self.levels,
+                level_mode=level_mode)
             if not connected:
                 log.warning(
                     "graph is disconnected: phi_approx=%d only bounds "

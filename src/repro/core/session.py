@@ -44,6 +44,7 @@ from repro.common import get_logger, next_multiple
 from repro.config.base import GraphEngineConfig
 from repro.core.backend import RelaxBackend, make_backend
 from repro.core.cluster import _initial_delta
+from repro.core.engine import resolve_engine_mode
 from repro.graph.structures import EdgeList
 
 log = get_logger("repro.session")
@@ -141,6 +142,15 @@ class GraphSession:
             if self.cfg.delta_init in ("avg", "min"):
                 self.cfg = dataclasses.replace(
                     self.cfg, delta_init=str(self.tuning.delta_init))
+
+        # -- decomposition mode (core/engine.py) ----------------------------
+        # Same pin semantics: an explicit "stages"/"oneshot" config always
+        # wins (the default "stages" stays byte-identical even under
+        # autotune); only "auto" defers to the tuning record. Unknown names
+        # raise here, before any device work.
+        mode_resolved = resolve_engine_mode(self.cfg.mode, self.tuning)
+        if mode_resolved != self.cfg.mode:
+            self.cfg = dataclasses.replace(self.cfg, mode=mode_resolved)
 
         if backend is None:
             t = self.tuning

@@ -120,6 +120,25 @@ def promote_centers(state: EngineState, new_centers: jnp.ndarray) -> EngineState
     )
 
 
+def promote_centers_shifted(state: EngineState, new_centers: jnp.ndarray,
+                            start_d: jnp.ndarray) -> EngineState:
+    """One-shot mode promote: centers enter the wave at ``d = start_d``
+    (the exponential start shift folded into the initial distance, MPVX
+    style) instead of 0. ``pathw`` still starts at 0, so ``final_pathw``
+    remains a realized path weight from the owning center — the radius
+    certificate is identical to the staged engine's."""
+    ids = jnp.arange(state.n, dtype=jnp.int32)
+    sel = new_centers & ~state.is_center & ~state.covered
+    return state._replace(
+        d=jnp.where(sel, start_d, state.d),
+        c=jnp.where(sel, ids, state.c),
+        pathw=jnp.where(sel, 0, state.pathw),
+        final_c=jnp.where(sel, ids, state.final_c),
+        final_pathw=jnp.where(sel, 0, state.final_pathw),
+        is_center=state.is_center | sel,
+    )
+
+
 def reset_in_stage(state: EngineState) -> EngineState:
     """Reset in-stage wave state: centers at (self,0), others unreached.
 

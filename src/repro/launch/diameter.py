@@ -27,6 +27,7 @@ from repro.core import (
     ClusterQuotientEstimator,
     DeltaSteppingEstimator,
     IntervalEstimator,
+    check_engine_mode,
     cluster,
     open_session,
 )
@@ -66,6 +67,25 @@ def add_autotune_argument(ap: argparse.ArgumentParser) -> None:
                          "'record' persists the tuning cache to JSON")
 
 
+def add_engine_mode_argument(ap: argparse.ArgumentParser) -> None:
+    """The shared --engine-mode CLI contract (also used by launch/serve.py).
+
+    Deliberately NOT an argparse ``choices`` list: unknown names flow into
+    ``check_engine_mode`` so the CLI and the library raise the same
+    ValueError listing the valid modes (regression-tested, mirroring the
+    serve.py estimator-name contract).
+    """
+    ap.add_argument("--engine-mode", default="stages",
+                    help="decomposition mode (core/engine.py): 'stages' "
+                         "(paper stage loop, default), 'oneshot' "
+                         "(exponential-shift single fixpoint), or 'auto' "
+                         "(defer to the autotuning record)")
+    ap.add_argument("--deterministic", action="store_true",
+                    help="oneshot mode: hash-derived shifts — the "
+                         "decomposition is a seed-independent function of "
+                         "the graph")
+
+
 def validate_tau(ap: argparse.ArgumentParser, tau) -> None:
     if tau is not None and tau < 1:
         ap.error(f"--tau must be >= 1 (got {tau}); omit it to use the "
@@ -99,6 +119,7 @@ def main() -> int:
     add_tau_argument(ap)
     add_cascade_arguments(ap)
     add_autotune_argument(ap)
+    add_engine_mode_argument(ap)
     ap.add_argument("--variant", default="stop", choices=["stop", "complete"])
     ap.add_argument("--delta-init", default="avg")
     ap.add_argument("--cluster2", action="store_true")
@@ -118,13 +139,16 @@ def main() -> int:
     args = ap.parse_args()
     validate_tau(ap, args.tau)
     validate_cascade(ap, args)
+    check_engine_mode(args.engine_mode)  # before any graph/device work
     backend_kind = "sharded" if args.distributed else args.backend
 
     g = build_graph(args.graph, args.n, args.seed)
     log.info("graph: %d nodes, %d directed edges", g.n_nodes, g.n_edges)
     cfg = GraphEngineConfig(variant=args.variant, delta_init=args.delta_init,
                             use_cluster2=args.cluster2, seed=args.seed,
-                            backend=backend_kind, comm=args.comm)
+                            backend=backend_kind, comm=args.comm,
+                            mode=args.engine_mode,
+                            deterministic=args.deterministic)
 
     backend = None
     if backend_kind == "sharded":

@@ -115,7 +115,9 @@ def serve_graph_diameter(args) -> int:
 
     graphs = [build_graph(args.graph, args.graph_n, seed=s)
               for s in range(args.batch)]
-    cfg = GraphEngineConfig(backend=args.backend, autotune=args.autotune)
+    cfg = GraphEngineConfig(backend=args.backend, autotune=args.autotune,
+                            mode=args.engine_mode,
+                            deterministic=args.deterministic)
     # --levels alone activates the cascade (same contract as
     # launch/diameter.py); other estimators don't take levels
     est_name = args.estimator
@@ -258,6 +260,7 @@ def main() -> int:
                     choices=["road", "social", "mesh"])
     from repro.launch.diameter import (add_autotune_argument,
                                        add_cascade_arguments,
+                                       add_engine_mode_argument,
                                        add_tau_argument, validate_cascade,
                                        validate_tau)
 
@@ -265,6 +268,7 @@ def main() -> int:
     add_tau_argument(ap)
     add_cascade_arguments(ap)
     add_autotune_argument(ap)
+    add_engine_mode_argument(ap)
     ap.add_argument("--backend", default="single",
                     choices=["single", "sharded", "pallas"])
     ap.add_argument("--queries", type=int, default=2,
@@ -291,6 +295,8 @@ def main() -> int:
     args = ap.parse_args()
     validate_tau(ap, args.tau)
     validate_cascade(ap, args)
+    from repro.core import check_engine_mode
+    check_engine_mode(args.engine_mode)  # before any graph/device work
     if args.queries < 1:
         ap.error("--queries must be >= 1")
     if args.batch < 1:
