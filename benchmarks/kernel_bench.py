@@ -182,6 +182,7 @@ def run_dynamic_bench(n: int = 20_000, n_batches: int = 6):
     supersteps for the fixed per-batch floor to amortize against), and
     (c) the post-replay interval bracket is still certified.
     """
+    from repro.analysis import guard
     from repro.core import (DynamicQuotientEstimator, IntervalEstimator,
                             open_session)
     from repro.graph import random_geometric, temporal_trace
@@ -194,14 +195,20 @@ def run_dynamic_bench(n: int = 20_000, n_batches: int = 6):
     st = sess.dynamic
     trace = temporal_trace(g, n_batches,
                            events_per_batch=max(g.n_edges // 200, 8), seed=7)
+    syncs0 = st.metrics.update_syncs
     t0 = time.perf_counter()
     actions = []
-    for b in trace:
-        rep = sess.apply_updates(b, tighten_cap=DYN_TIGHTEN_CAP,
-                                 regrow_cap=DYN_REGROW_CAP)
-        actions.append(rep.action)
+    with guard.measured_transfers() as upd_meter:
+        for b in trace:
+            rep = sess.apply_updates(b, tighten_cap=DYN_TIGHTEN_CAP,
+                                     regrow_cap=DYN_REGROW_CAP)
+            actions.append(rep.action)
     dt_upd = (time.perf_counter() - t0) / max(n_batches, 1)
     m = st.metrics
+    upd_syncs = m.update_syncs - syncs0
+    assert upd_meter.transfers == upd_syncs, (
+        f"dynamic replay measured {upd_meter.transfers} device->host "
+        f"transfers but DynamicMetrics counted {upd_syncs}")
     amortized = m.amortized_supersteps
     assert amortized < m.baseline_supersteps, (
         f"amortized update cost {amortized} supersteps/batch is not below "
@@ -229,6 +236,8 @@ def run_dynamic_bench(n: int = 20_000, n_batches: int = 6):
         "update_s_per_batch": round(dt_upd, 3),
         "open_s": round(dt_open, 2),
         "post_update_estimate_s": round(dt_est, 3),
+        "update_syncs": upd_syncs,
+        "measured_transfers": upd_meter.transfers,
         "interval_lower": iv.lower,
         "interval_upper": iv.upper,
         "connected": iv.connected,
@@ -254,6 +263,7 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
     (b) ``IntervalEstimator`` certifies lower <= upper on the bench graph
     with bounds matching the legacy scripts' numbers.
     """
+    from repro.analysis import guard
     from repro.core import (
         CascadeEstimator,
         ClusterQuotientEstimator,
@@ -266,11 +276,16 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
 
     g = random_geometric(n, avg_degree=3.0, seed=1)
     t0 = time.perf_counter()
-    dec = cluster(g, tau, seed=3)
+    with guard.measured_transfers() as stage_meter:
+        dec = cluster(g, tau, seed=3)
     dt = time.perf_counter() - t0
     m = dec.metrics
     assert m.state_transfers <= 1, f"plane pack ran {m.state_transfers}x"
     assert m.host_syncs == m.stages, (m.host_syncs, m.stages)
+    # every sync the metrics claim is a transfer the guard measured — the
+    # counter is a proven measurement, not bookkeeping (repro.analysis)
+    assert stage_meter.transfers == m.host_syncs + m.finalize_syncs, (
+        stage_meter.transfers, m.host_syncs, m.finalize_syncs)
 
     old_syncs = m.stages + 2 * m.grow_calls   # chatty-loop model (see above)
     old_packs = m.grow_calls                  # distributed seed packed per grow
@@ -284,6 +299,8 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
         "plane_packs_engine": m.state_transfers,
         "plane_packs_chatty_loop": old_packs,
         "sync_reduction": round(old_syncs / max(m.host_syncs, 1), 2),
+        "host_syncs_total": m.host_syncs + m.finalize_syncs,
+        "measured_transfers": stage_meter.transfers,
         "seconds": round(dt, 2),
     }
 
@@ -292,16 +309,20 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
     # Acceptance: <= 8 host syncs end-to-end on the bench graph.
     sess = open_session(g)
     t0 = time.perf_counter()
-    est = sess.estimate(ClusterQuotientEstimator())
+    with guard.measured_transfers() as pipe_meter:
+        est = sess.estimate(ClusterQuotientEstimator())
     dt_pipe = time.perf_counter() - t0
     pm = est.pipeline
     assert pm is not None
     assert pm.total_host_syncs <= 8, f"pipeline ran {pm.total_host_syncs} syncs"
+    assert pipe_meter.transfers == pm.total_host_syncs, (
+        pipe_meter.transfers, pm.total_host_syncs)
     row["pipeline"] = {
         "phi_approx": est.phi_approx,
         "n_clusters": est.n_clusters,
         "quotient_edges": pm.n_quotient_edges,
         "host_syncs_total": pm.total_host_syncs,
+        "measured_transfers": pipe_meter.transfers,
         "host_syncs_decompose": pm.decompose_syncs,
         "host_syncs_finalize": pm.finalize_syncs,
         "host_syncs_quotient": pm.quotient_syncs,
@@ -315,9 +336,12 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
     # STRICTLY fewer BF supersteps than the flat pipeline's, and the
     # cascade's upper still brackets against the farthest-point lower.
     t0 = time.perf_counter()
-    casc = sess.estimate(CascadeEstimator(levels=2, tau_solve=64))
+    with guard.measured_transfers() as casc_meter:
+        casc = sess.estimate(CascadeEstimator(levels=2, tau_solve=64))
     dt_casc = time.perf_counter() - t0
     cpm = casc.pipeline
+    assert casc_meter.transfers == cpm.total_host_syncs, (
+        casc_meter.transfers, cpm.total_host_syncs)
     assert cpm.cascade_levels >= 1, "bench cascade never cascaded"
     assert cpm.solve_supersteps < pm.solve_supersteps, (
         f"cascade solve ran {cpm.solve_supersteps} supersteps, flat ran "
@@ -338,6 +362,7 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
         "solve_supersteps": cpm.solve_supersteps,
         "solve_supersteps_flat": pm.solve_supersteps,
         "host_syncs_total": cpm.total_host_syncs,
+        "measured_transfers": casc_meter.transfers,
         "interval_lower": iv_c.lower,
         "interval_upper": iv_c.upper,
         "connected": casc.connected,
@@ -350,9 +375,12 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
     # certified bracket stays valid when the pipeline's level-0
     # decomposition runs in oneshot mode.
     t0 = time.perf_counter()
-    dec_1 = cluster(g, tau, seed=3, mode="oneshot")
+    with guard.measured_transfers() as one_meter:
+        dec_1 = cluster(g, tau, seed=3, mode="oneshot")
     dt_1 = time.perf_counter() - t0
     m1 = dec_1.metrics
+    assert one_meter.transfers == m1.host_syncs + m1.finalize_syncs, (
+        one_meter.transfers, m1.host_syncs, m1.finalize_syncs)
     assert m1.host_syncs < m.host_syncs, (
         f"oneshot ran {m1.host_syncs} host syncs, stage engine ran "
         f"{m.host_syncs} — the mode exists to beat the stage loop's syncs")
@@ -365,6 +393,8 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
         "supersteps": dec_1.growing_steps,
         "supersteps_stages": m.growing_steps,
         "host_syncs": m1.host_syncs,
+        "host_syncs_total": m1.host_syncs + m1.finalize_syncs,
+        "measured_transfers": one_meter.transfers,
         "host_syncs_stages": m.host_syncs,
         "sync_reduction": round(m.host_syncs / max(m1.host_syncs, 1), 2),
         "radius": dec_1.radius,
@@ -455,6 +485,37 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
         "interval_host_syncs": iv.pipeline.total_host_syncs,
     }
     sess.close()
+
+    # the transfer-guard equality contracts (repro.analysis): every block's
+    # hand-incremented sync counter equals the number of device->host
+    # transfers the guard actually measured over that region, so the BENCH
+    # sync numbers are proven measurements. Each pair was already asserted
+    # equal at its measurement site above; a drift breaks the bench loudly.
+    contracts = {
+        "stages": {"measured_transfers": stage_meter.transfers,
+                   "counted_syncs": m.host_syncs + m.finalize_syncs},
+        "oneshot": {"measured_transfers": one_meter.transfers,
+                    "counted_syncs": m1.host_syncs + m1.finalize_syncs},
+        "pipeline": {"measured_transfers": pipe_meter.transfers,
+                     "counted_syncs": pm.total_host_syncs},
+        "cascade": {"measured_transfers": casc_meter.transfers,
+                    "counted_syncs": cpm.total_host_syncs},
+    }
+    if "dynamic" in row:
+        contracts["dynamic"] = {
+            "measured_transfers": row["dynamic"]["measured_transfers"],
+            "counted_syncs": row["dynamic"]["update_syncs"]}
+    all_equal = all(c["measured_transfers"] == c["counted_syncs"]
+                    for c in contracts.values())
+    assert all_equal, contracts
+    row["analysis"] = {
+        "meter": "repro.analysis.guard: cooperative guard.fetch metering "
+                 "under jax.transfer_guard (teeth on TPU/GPU; sync-lint is "
+                 "the universal static enforcement)",
+        "contracts": contracts,
+        "all_equal": all_equal,
+    }
+
     with open(out_path, "w") as f:
         json.dump(row, f, indent=1)
     print(",".join(f"{k}={v}" for k, v in row.items()))

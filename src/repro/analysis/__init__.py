@@ -1,0 +1,49 @@
+"""``repro.analysis`` — static sync/dtype/kernel/determinism checking
+plus runtime transfer-guard enforcement.
+
+Static half (stdlib-only, ``python -m repro.analysis src/``):
+
+  * :mod:`repro.analysis.sync_lint` — implicit device->host transfers
+  * :mod:`repro.analysis.dtype_lint` — distance-dtype bounds, falsy knobs
+  * :mod:`repro.analysis.pallas_lint` — pallas_call contracts
+  * :mod:`repro.analysis.determinism_lint` — entropy in decomposition paths
+
+Runtime half (:mod:`repro.analysis.guard`): ``guard.fetch`` is the one
+sanctioned fetch point; ``guard.measured_transfers()`` meters a region
+and proves ``measured == EngineMetrics.host_syncs`` (see guard docstring
+for the exact contracts).
+
+Importing this package pulls no jax — the linters must run in a bare CI
+job. ``guard`` imports jax lazily inside its functions.
+"""
+from repro.analysis.common import Finding, SourceFile, run_checkers
+
+
+def all_checkers():
+    """Name -> checker map, importing lazily so a syntax error in one
+    checker doesn't mask the others in tracebacks."""
+    from repro.analysis import (
+        determinism_lint,
+        dtype_lint,
+        pallas_lint,
+        sync_lint,
+    )
+    return {
+        "sync": sync_lint.check,
+        "dtype": dtype_lint.check,
+        "pallas": pallas_lint.check,
+        "det": determinism_lint.check,
+    }
+
+
+def run_analysis(paths, checkers=None):
+    """Run (a subset of) the checkers. Returns
+    ``(active, suppressed, errors)`` finding lists."""
+    table = all_checkers()
+    if checkers:
+        table = {k: v for k, v in table.items() if k in checkers}
+    return run_checkers(paths, table)
+
+
+__all__ = ["Finding", "SourceFile", "run_checkers", "all_checkers",
+           "run_analysis"]

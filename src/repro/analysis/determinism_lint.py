@@ -1,0 +1,141 @@
+"""determinism-lint: decomposition paths promise byte-identical output.
+
+The deterministic one-shot mode (Elkin–Haeupler-style hashed shifts) and
+the megakernel parity tests both assert byte-identical results, and the
+dynamic path's certified re-clustering depends on replayable decisions.
+These only hold if nothing in the decomposition modules draws entropy
+from outside the PRNG-key discipline:
+
+  DET001  unseeded host randomness (np.random.* module-state calls,
+          random.*): a default_rng(seed)/Generator instance is fine,
+          the global-state API is not.
+  DET002  time-dependent values (time.time/monotonic/perf_counter,
+          datetime.now) inside decomposition modules — wall-clock must
+          never reach a decision; benchmark timing belongs in the
+          harness, not the algorithm.
+  DET003  iteration-order dependence on sets: materializing a set into
+          an ordered container (list/tuple/sorted-less np.fromiter/
+          np.array, or a bare for-loop) makes downstream output depend
+          on hash-iteration order. Tracked for intra-function set
+          values and the known set-typed attributes of the dynamic
+          subsystem (``dirty_centers``).
+  DET004  builtin hash() — PYTHONHASHSEED-dependent for strings.
+
+Rules DET002–DET004 apply only inside decomposition modules (engine,
+state, dynamic, quotient, cluster, kernels); DET001 applies everywhere.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.common import Finding, SourceFile, dotted_name, finding
+
+_DECOMP_MARKERS = ("core/engine", "core/state", "core/dynamic",
+                   "core/quotient", "core/cluster", "kernels/")
+
+# attributes known (module contract) to hold builtin sets
+_KNOWN_SET_ATTRS = {"dirty_centers"}
+
+_TIME_CALLS = {"time.time", "time.monotonic", "time.perf_counter",
+               "time.process_time", "datetime.now", "datetime.utcnow",
+               "datetime.datetime.now", "datetime.datetime.utcnow"}
+
+_ORDERING_CONSUMERS = {"list", "tuple", "np.fromiter", "numpy.fromiter",
+                       "np.array", "numpy.array", "np.asarray",
+                       "numpy.asarray"}
+
+
+def _is_decomp_module(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return any(m in p for m in _DECOMP_MARKERS)
+
+
+def _is_set_expr(node: ast.AST, set_names: Set[str]) -> bool:
+    if isinstance(node, ast.Set) or isinstance(node, ast.SetComp):
+        return True
+    if isinstance(node, ast.Call) and dotted_name(node.func) == "set":
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in set_names
+    if isinstance(node, ast.Attribute):
+        return node.attr in _KNOWN_SET_ATTRS
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        return (_is_set_expr(node.left, set_names)
+                or _is_set_expr(node.right, set_names))
+    return False
+
+
+class _Scope(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile, findings: List[Finding],
+                 decomp: bool):
+        self.sf = sf
+        self.findings = findings
+        self.decomp = decomp
+        self.set_names: Set[str] = set()
+
+    def _flag(self, code: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(finding("det", code, self.sf, node, msg))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        if _is_set_expr(node.value, self.set_names):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.set_names.add(t.id)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = dotted_name(node.func)
+        # DET001 — global-state randomness (everywhere)
+        if name.startswith(("np.random.", "numpy.random.", "random.")):
+            tail = name.split(".")[-1]
+            if tail not in ("default_rng", "Generator", "SeedSequence",
+                            "PCG64"):
+                self._flag("DET001", node,
+                           f"{name}() draws from global RNG state; use "
+                           "np.random.default_rng(seed) so decompositions "
+                           "replay byte-identically")
+            elif tail == "default_rng" and not node.args \
+                    and not node.keywords:
+                self._flag("DET001", node,
+                           "default_rng() without a seed is entropy-"
+                           "seeded; pass an explicit seed")
+        if self.decomp:
+            # DET002 — wall clock inside the algorithm
+            if name in _TIME_CALLS:
+                self._flag("DET002", node,
+                           f"{name}() inside a decomposition module: "
+                           "wall-clock must never reach a decision")
+            # DET003 — ordered materialization of a set
+            if name in _ORDERING_CONSUMERS and node.args and \
+                    _is_set_expr(node.args[0], self.set_names):
+                self._flag("DET003", node,
+                           f"{name}(<set>) fixes hash-iteration order "
+                           "into the output; sort first or prove the "
+                           "consumer order-insensitive")
+            # DET004 — builtin hash
+            if name == "hash":
+                self._flag("DET004", node,
+                           "builtin hash() is PYTHONHASHSEED-dependent "
+                           "for strings; use a keyed/integer hash")
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if self.decomp and _is_set_expr(node.iter, self.set_names):
+            self._flag("DET003", node.iter,
+                       "iterating a set fixes hash order into control "
+                       "flow; sort first or prove order-insensitivity")
+        self.generic_visit(node)
+
+    def visit_comprehension(self, node: ast.comprehension) -> None:
+        if self.decomp and _is_set_expr(node.iter, self.set_names):
+            self._flag("DET003", node.iter,
+                       "comprehension over a set fixes hash order into "
+                       "the result; sort first")
+        self.generic_visit(node)
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    _Scope(sf, findings, _is_decomp_module(sf.path)).visit(sf.tree)
+    return findings

@@ -1,0 +1,269 @@
+"""pallas-lint: static validation of ``pl.pallas_call`` sites.
+
+Pallas failures on real hardware are late and cryptic (a mis-arity index
+map traces fine and mosaics wrong; an oversized scratch OOMs at compile;
+a cross-block scratch race returns different answers per run). These
+rules check, at the AST level, the contracts the kernels in
+``kernels/edge_relax/{kernel,megakernel}.py`` rely on:
+
+  PL001  BlockSpec index_map arity must match the iteration space:
+         len(grid) positional args, plus num_scalar_prefetch more under
+         a ``PrefetchScalarGridSpec`` (a ``*rest`` vararg satisfies the
+         tail). A wrong arity either crashes at trace time or silently
+         drops a grid axis.
+  PL002  a module containing ``pallas_call`` must route its tile shapes
+         through a validator (``validate_tiling`` / ``validate_block_tile``
+         / ``fits_vmem``): lane-misaligned edge blocks or non-power-of-two
+         node tiles produce wrong DMA descriptors, not error messages.
+  PL003  VMEM budget: constant-shaped scratch_shapes are summed against
+         the 8 MiB accumulator budget (``megakernel.VMEM_BUDGET_BYTES``);
+         variable-shaped scratch requires the module to carry a runtime
+         footprint guard (``vmem_footprint_bytes`` / ``fits_vmem``).
+  PL004  scratch accumulators + a multi-dim grid require
+         ``dimension_semantics`` declaring every axis "arbitrary"
+         (sequential): without it the compiler may parallelize a grid
+         axis over which the kernel accumulates read-modify-write, which
+         is a write race.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.common import Finding, SourceFile, dotted_name, finding
+
+# keep in sync with kernels/edge_relax/megakernel.VMEM_BUDGET_BYTES
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+_DTYPE_BYTES = {"int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+                "int16": 2, "uint16": 2, "bfloat16": 2, "float16": 2,
+                "int32": 4, "uint32": 4, "float32": 4,
+                "int64": 8, "uint64": 8, "float64": 8}
+
+_VALIDATORS = ("validate_tiling", "validate_block_tile", "fits_vmem",
+               "vmem_footprint_bytes")
+
+
+def _const_int(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.BinOp):
+        l, r = _const_int(node.left), _const_int(node.right)
+        if l is None or r is None:
+            return None
+        try:
+            if isinstance(node.op, ast.Mult):
+                return l * r
+            if isinstance(node.op, ast.Add):
+                return l + r
+            if isinstance(node.op, ast.Pow):
+                return l ** r
+            if isinstance(node.op, ast.FloorDiv):
+                return l // r
+        except Exception:
+            return None
+    return None
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+class _SiteContext:
+    """A pallas_call together with the grid spec that shapes it."""
+
+    def __init__(self, call: ast.Call, local_defs: Dict[str, ast.Call]):
+        self.call = call
+        self.local_defs = local_defs
+        self.grid_len: Optional[int] = None
+        self.prefetch = 0
+        self.specs: List[ast.AST] = []
+        self.scratch: Optional[ast.AST] = None
+        self.semantics: Optional[ast.AST] = None
+        self._resolve()
+
+    def _deref(self, node: Optional[ast.AST]) -> Optional[ast.AST]:
+        """Follow one level of local Name -> assigned Call."""
+        if isinstance(node, ast.Name) and node.id in self.local_defs:
+            return self.local_defs[node.id]
+        return node
+
+    def _resolve(self) -> None:
+        src = self.call
+        grid_spec = self._deref(_kwarg(src, "grid_spec"))
+        if isinstance(grid_spec, ast.Call) and \
+                dotted_name(grid_spec.func).endswith("PrefetchScalarGridSpec"):
+            pf = _kwarg(grid_spec, "num_scalar_prefetch")
+            self.prefetch = _const_int(pf) or 0 if pf is not None else 0
+            src = grid_spec
+        grid = _kwarg(src, "grid")
+        if isinstance(grid, (ast.Tuple, ast.List)):
+            self.grid_len = len(grid.elts)
+        elif grid is not None and _const_int(grid) is not None:
+            self.grid_len = 1
+        for key in ("in_specs", "out_specs"):
+            val = self._deref(_kwarg(src, key))
+            self.specs.extend(self._spec_elements(val))
+        self.scratch = self._deref(_kwarg(src, "scratch_shapes"))
+        params = self._deref(_kwarg(self.call, "compiler_params"))
+        if isinstance(params, ast.Call):
+            self.semantics = _kwarg(params, "dimension_semantics")
+        elif params is not None:
+            self.semantics = None
+
+    def _spec_elements(self, val: Optional[ast.AST]) -> List[ast.AST]:
+        """Expand [spec]*9 / [a, b, c] lists of (possibly Name-bound)
+        BlockSpec constructor calls."""
+        out: List[ast.AST] = []
+        if isinstance(val, ast.BinOp) and isinstance(val.op, ast.Mult):
+            for side in (val.left, val.right):
+                out.extend(self._spec_elements(side))
+            return out
+        if isinstance(val, (ast.Tuple, ast.List)):
+            for e in val.elts:
+                e = self._deref(e)
+                if isinstance(e, ast.Call):
+                    out.append(e)
+            return out
+        val = self._deref(val)
+        if isinstance(val, ast.Call):
+            out.append(val)
+        return out
+
+
+def _index_map_of(spec: ast.AST) -> Optional[ast.AST]:
+    if not isinstance(spec, ast.Call):
+        return None
+    if not dotted_name(spec.func).endswith("BlockSpec"):
+        return None
+    im = _kwarg(spec, "index_map")
+    if im is not None:
+        return im
+    # positional BlockSpec(block_shape, index_map)
+    if len(spec.args) >= 2:
+        return spec.args[1]
+    return None
+
+
+def _scratch_bytes(node: ast.AST) -> Optional[int]:
+    """pltpu.VMEM((a, b), dtype) -> a*b*sizeof(dtype) when constant."""
+    if not (isinstance(node, ast.Call)
+            and dotted_name(node.func).endswith(("VMEM", "SMEM"))):
+        return None
+    if not node.args:
+        return None
+    shape = node.args[0]
+    dims = (shape.elts if isinstance(shape, (ast.Tuple, ast.List))
+            else [shape])
+    total = 1
+    for d in dims:
+        c = _const_int(d)
+        if c is None:
+            return None
+        total *= c
+    nbytes = 4
+    if len(node.args) >= 2:
+        dt = dotted_name(node.args[1]).split(".")[-1]
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+    return total * nbytes
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    calls = [n for n in ast.walk(sf.tree)
+             if isinstance(n, ast.Call)
+             and dotted_name(n.func).endswith("pallas_call")]
+    if not calls:
+        return findings
+
+    has_validator = any(
+        isinstance(n, (ast.Call, ast.FunctionDef))
+        and (dotted_name(getattr(n, "func", n)) or
+             getattr(n, "name", "")).split(".")[-1] in _VALIDATORS
+        for n in ast.walk(sf.tree))
+    if not has_validator:
+        findings.append(finding(
+            "pallas", "PL002", sf, calls[0],
+            "module invokes pallas_call but never routes tile shapes "
+            "through validate_tiling/validate_block_tile/fits_vmem; "
+            "misaligned tiles fail silently on hardware"))
+
+    module_has_footprint_guard = any(
+        v in sf.text for v in ("vmem_footprint_bytes", "fits_vmem"))
+
+    for call in calls:
+        # collect local `name = <Call>` bindings in the enclosing function
+        local_defs: Dict[str, ast.Call] = {}
+        for fn in ast.walk(sf.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                    fn.lineno <= call.lineno <= (fn.end_lineno or fn.lineno):
+                for stmt in ast.walk(fn):
+                    if (isinstance(stmt, ast.Assign)
+                            and len(stmt.targets) == 1
+                            and isinstance(stmt.targets[0], ast.Name)
+                            and isinstance(stmt.value, ast.Call)):
+                        local_defs[stmt.targets[0].id] = stmt.value
+        ctx = _SiteContext(call, local_defs)
+
+        # PL001 — index_map arity vs grid (+ scalar prefetch operands)
+        if ctx.grid_len is not None:
+            want = ctx.grid_len + ctx.prefetch
+            for spec in ctx.specs:
+                im = _index_map_of(spec)
+                if not isinstance(im, ast.Lambda):
+                    continue
+                if im.args.vararg is not None:
+                    continue   # *rest absorbs the tail
+                got = len(im.args.args) + len(im.args.posonlyargs)
+                if got != want:
+                    findings.append(finding(
+                        "pallas", "PL001", sf, im,
+                        f"BlockSpec index_map takes {got} args but the "
+                        f"iteration space supplies {want} "
+                        f"(grid={ctx.grid_len} + "
+                        f"scalar_prefetch={ctx.prefetch}); a dropped grid "
+                        "axis mosaics the wrong block"))
+
+        # PL003 — VMEM budget on scratch shapes
+        if ctx.scratch is not None:
+            elems = (ctx.scratch.elts
+                     if isinstance(ctx.scratch, (ast.Tuple, ast.List))
+                     else [ctx.scratch])
+            total = 0
+            unknown = False
+            for e in elems:
+                b = _scratch_bytes(e)
+                if b is None:
+                    unknown = True
+                else:
+                    total += b
+            if total > VMEM_BUDGET_BYTES:
+                findings.append(finding(
+                    "pallas", "PL003", sf, ctx.scratch,
+                    f"scratch_shapes total {total} bytes exceeds the "
+                    f"{VMEM_BUDGET_BYTES}-byte VMEM accumulator budget"))
+            elif unknown and not module_has_footprint_guard:
+                findings.append(finding(
+                    "pallas", "PL003", sf, ctx.scratch,
+                    "variable-shaped VMEM scratch without a runtime "
+                    "footprint guard (vmem_footprint_bytes/fits_vmem); "
+                    "an oversized tile OOMs at compile time on device"))
+
+        # PL004 — scratch accumulators need sequential grid semantics
+        if ctx.scratch is not None and (ctx.grid_len or 0) >= 1:
+            ok = False
+            if isinstance(ctx.semantics, (ast.Tuple, ast.List)):
+                vals = [getattr(e, "value", None) for e in ctx.semantics.elts]
+                ok = (len(vals) == ctx.grid_len
+                      and all(v == "arbitrary" for v in vals))
+            if not ok:
+                findings.append(finding(
+                    "pallas", "PL004", sf, call,
+                    "pallas_call accumulates into scratch across a grid "
+                    "but does not declare dimension_semantics="
+                    "('arbitrary', ...) for every axis; a parallelized "
+                    "axis turns the accumulation into a write race"))
+    return findings

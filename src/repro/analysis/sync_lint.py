@@ -1,0 +1,340 @@
+"""sync-lint: find implicit device->host transfers in hot paths.
+
+The paper's entire advantage over Δ-stepping is round complexity; in this
+repo a round IS a host synchronization, and the BENCH contracts (≤8
+pipeline syncs, 1-sync oneshot) rest on hand-incremented counters. This
+checker makes the counters and the code unable to drift: every expression
+that forces a device value onto the host must either
+
+  * route through the sanctioned ``repro.analysis.guard.fetch(x, reason=...)``
+    helper (counted at runtime, annotated by construction), or
+  * carry a ``# sync: <reason>`` pragma on/next to the flagged line.
+
+Detection is an intra-function taint walk. Taint seeds:
+
+  * expressions rooted in ``jnp.*`` / ``jax.*`` calls (device values),
+  * results of calls to module-local functions decorated ``@jax.jit`` /
+    ``@partial(jax.jit, ...)``,
+  * every non-static parameter of a jitted function (tracers).
+
+Taint propagates through assignment, arithmetic, subscripts, tuple
+unpacking, and method calls on tainted receivers; it is CLEARED by shape
+/ dtype metadata access and by ``guard.fetch`` (whose result is host
+numpy). Sinks:
+
+  SYNC001  int()/float()/complex() on a device value
+  SYNC002  .item()/.tolist() on a device value
+  SYNC003  np.asarray()/np.array() on a device value
+  SYNC004  truthiness of a device value (if/while/assert/bool()/not/and/or)
+  SYNC005  iteration over a device value (for / comprehension / starred)
+  SYNC006  explicit jax.device_get / .block_until_ready (still a sync —
+           must be pragma'd so it shows up in the sync budget)
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.common import (
+    Finding,
+    SourceFile,
+    dotted_name,
+    finding,
+    is_jitted,
+    jit_static_argnames,
+)
+
+# attribute access that yields host metadata, not a device buffer
+_META_ATTRS = {"shape", "dtype", "ndim", "size", "nbytes", "at", "weak_type"}
+# numpy module aliases whose asarray/array is a device->host sink
+_NP_ALIASES = {"np", "numpy", "onp"}
+# jax module roots that produce device values
+_JAX_ROOTS = {"jnp", "jax", "lax", "pl", "pltpu"}
+# jax/jnp calls that return HOST values (strings, ints, dtype metadata,
+# python containers) — never tainted
+_HOST_RETURNING = {
+    "jax.default_backend", "jax.devices", "jax.local_devices",
+    "jax.device_count", "jax.local_device_count", "jax.process_index",
+    "jax.process_count", "jnp.issubdtype", "jnp.iinfo", "jnp.finfo",
+    "jnp.dtype", "jnp.result_type", "jnp.promote_types", "jnp.ndim",
+    "jnp.shape",
+}
+_HOST_RETURNING_PREFIXES = ("jax.tree_util.", "jax.tree.")
+
+
+def _root_name(node: ast.AST) -> str:
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = getattr(node, "value", None) or getattr(node, "func", None)
+        if node is None:
+            return ""
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+class _FunctionLinter(ast.NodeVisitor):
+    """One function scope: seed taint, propagate, flag sinks."""
+
+    def __init__(self, sf: SourceFile, fn: ast.AST, jitted_locals: Set[str],
+                 findings: List[Finding]):
+        self.sf = sf
+        self.fn = fn
+        self.jitted_locals = jitted_locals
+        self.findings = findings
+        self.record = True   # pass 1 (taint fixpoint) sets this False
+        self.tainted: Set[str] = set()
+        if is_jitted(fn):
+            static = jit_static_argnames(fn)
+            args = fn.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                if a.arg not in static and a.arg != "self":
+                    self.tainted.add(a.arg)
+
+    # ---- taint query ------------------------------------------------
+
+    def is_tainted(self, node: Optional[ast.AST]) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _META_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            # `x is None` is an identity check on the python object —
+            # host-side, never a transfer, whatever x holds
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self.is_tainted(node.left)
+                    or any(self.is_tainted(c) for c in node.comparators))
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_tainted(node)
+        if isinstance(node, ast.NamedExpr):
+            return self.is_tainted(node.value)
+        return False
+
+    def _call_tainted(self, node: ast.Call) -> bool:
+        name = dotted_name(node.func)
+        root = name.split(".", 1)[0] if name else _root_name(node.func)
+        # sanctioned fetch: host numpy out, never tainted
+        if self._is_guard_fetch(node):
+            return False
+        # metadata/introspection calls return host values
+        if name in _HOST_RETURNING or \
+                name.startswith(_HOST_RETURNING_PREFIXES):
+            return False
+        # jnp.stack(...), jax.random.uniform(...), lax.while_loop(...)
+        if root in _JAX_ROOTS:
+            return True
+        # module-local jitted functions return device values
+        if name in self.jitted_locals:
+            return True
+        # method call on a tainted receiver: x.astype(...), x.sum(), ...
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in ("item", "tolist", "block_until_ready"):
+                # handled as sinks; their results are host values
+                return False
+            if node.func.attr in ("memory_analysis", "cost_analysis"):
+                # AOT introspection: host metadata, no device buffer
+                return False
+            return self.is_tainted(node.func.value)
+        # builtins that preserve device-ness of their argument
+        if name in ("abs", "min", "max", "sum"):
+            return any(self.is_tainted(a) for a in node.args)
+        return False
+
+    @staticmethod
+    def _is_guard_fetch(node: ast.Call) -> bool:
+        name = dotted_name(node.func)
+        return ((name == "fetch" or name.endswith(".fetch"))
+                and any(kw.arg == "reason" for kw in node.keywords))
+
+    # ---- helpers ----------------------------------------------------
+
+    def _flag(self, code: str, node: ast.AST, msg: str) -> None:
+        if self.record:
+            self.findings.append(finding("sync", code, self.sf, node, msg))
+
+    def run(self) -> None:
+        """Flow-sensitive single pass. Loop bodies are pre-visited with
+        findings muted so loop-carried taint (a name assigned late in the
+        body, used at the top) reaches a fixpoint before recording —
+        straight-line code keeps exact statement order, so a host int
+        later rebound to a device value doesn't poison its earlier uses."""
+        self.visit(self.fn)
+
+    def _muted_visit(self, *nodes: ast.AST) -> None:
+        prev, self.record = self.record, False
+        try:
+            for n in nodes:
+                self.visit(n)
+        finally:
+            self.record = prev
+
+    def _taint_target(self, target: ast.AST, on: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.tainted.add if on else self.tainted.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._taint_target(e, on)
+        elif isinstance(target, ast.Starred):
+            self._taint_target(target.value, on)
+
+    def _check_truthiness(self, test: ast.AST) -> None:
+        if self.is_tainted(test):
+            self._flag("SYNC004", test,
+                       "truthiness of a device value forces a host sync "
+                       "(use jnp.where/lax.cond, or guard.fetch the scalar)")
+
+    # ---- statements -------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)
+        on = self.is_tainted(node.value)
+        # map(int, np.asarray(stats)) unpacking: handled at the Call sink
+        for t in node.targets:
+            self._taint_target(t, on)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if self.is_tainted(node.value):
+            self._taint_target(node.target, True)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self.generic_visit(node)
+        if node.value is not None and node.target is not None:
+            self._taint_target(node.target, self.is_tainted(node.value))
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_truthiness(node.test)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        for stmt in node.body:
+            self._muted_visit(stmt)
+        self._check_truthiness(node.test)
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._check_truthiness(node.test)
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._check_truthiness(node.test)
+        self.generic_visit(node)
+
+    def visit_BoolOp(self, node: ast.BoolOp) -> None:
+        for v in node.values:
+            if self.is_tainted(v):
+                self._flag("SYNC004", v,
+                           "and/or on a device value coerces it to bool "
+                           "(host sync); use jnp.logical_and/or")
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        for stmt in node.body:
+            self._muted_visit(stmt)
+        if self.is_tainted(node.iter):
+            self._flag("SYNC005", node.iter,
+                       "iterating a device array fetches one element per "
+                       "step; batch into one guard.fetch")
+        self._taint_target(node.target, self.is_tainted(node.iter))
+        self.generic_visit(node)
+
+    def visit_comprehension(self, node: ast.comprehension) -> None:
+        if self.is_tainted(node.iter):
+            self._flag("SYNC005", node.iter,
+                       "comprehension over a device array fetches "
+                       "element-wise; batch into one guard.fetch")
+        self.generic_visit(node)
+
+    # ---- calls (the scalar-coercion sinks) --------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = dotted_name(node.func)
+        arg0 = node.args[0] if node.args else None
+        if name in ("int", "float", "complex") and self.is_tainted(arg0):
+            self._flag("SYNC001", node,
+                       f"{name}() on a device value is an implicit "
+                       "device->host transfer; route through guard.fetch")
+        elif name == "bool" and self.is_tainted(arg0):
+            self._flag("SYNC004", node,
+                       "bool() on a device value is an implicit host sync; "
+                       "route through guard.fetch")
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr in ("item", "tolist")
+              and self.is_tainted(node.func.value)):
+            self._flag("SYNC002", node,
+                       f".{node.func.attr}() on a device value is an "
+                       "implicit device->host transfer; route through "
+                       "guard.fetch")
+        elif (name.split(".", 1)[0] in _NP_ALIASES
+              and name.split(".")[-1] in ("asarray", "array")
+              and self.is_tainted(arg0)):
+            self._flag("SYNC003", node,
+                       "np.asarray() on a device value materializes on the "
+                       "host; route through guard.fetch so the transfer is "
+                       "counted")
+        elif name in ("jax.device_get",) or (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "block_until_ready"
+                and self.is_tainted(node.func.value)):
+            self._flag("SYNC006", node,
+                       "explicit device sync; annotate with '# sync:' so "
+                       "it shows up in the sync budget")
+        elif name == "map" and len(node.args) == 2:
+            # map(int, <device value>) — the engine's old stats pattern
+            f, it = node.args
+            if (isinstance(f, ast.Name) and f.id in ("int", "float")
+                    and self.is_tainted(it)):
+                self._flag("SYNC001", node,
+                           "map(int, <device value>) coerces element-wise "
+                           "on the host; guard.fetch the vector first")
+        self.generic_visit(node)
+
+    # nested defs get their own scope (fresh linter)
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        if node is self.fn:
+            self.generic_visit(node)
+        elif self.record:   # nested scopes linted once, on the record pass
+            _FunctionLinter(self.sf, node, self.jitted_locals,
+                            self.findings).run()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        # lambdas inherit the enclosing taint set (closures)
+        self.generic_visit(node)
+
+
+def check(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    jitted_locals: Set[str] = {
+        n.name for n in ast.walk(sf.tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        and is_jitted(n)
+    }
+    for node in sf.tree.body:
+        _lint_scope(sf, node, jitted_locals, findings)
+    return findings
+
+
+def _lint_scope(sf: SourceFile, node: ast.AST, jitted_locals: Set[str],
+                findings: List[Finding]) -> None:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        _FunctionLinter(sf, node, jitted_locals, findings).run()
+    elif isinstance(node, ast.ClassDef):
+        for item in node.body:
+            _lint_scope(sf, item, jitted_locals, findings)
+    # module-level statements: no taint seeds (imports, constants)

@@ -69,7 +69,7 @@ def save(
     flat = _flatten(tree)
     manifest = {"step": step, "extra": extra or {}, "leaves": {}}
     for key, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))
+        arr = np.asarray(jax.device_get(leaf))  # sync: checkpoint save materializes every leaf by design
         fname = f"{key}.npy"
         with open(os.path.join(tmp, fname), "wb") as f:
             np.save(f, arr)

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import guard
 from repro.common import get_logger, next_multiple
 from repro.graph.segment_ops import segment_aggregate
 from repro.graph.structures import EdgeList
@@ -144,8 +145,9 @@ def compute_graph_stats(edges: EdgeList) -> GraphStats:
     if n == 0 or e == 0:
         zeros = (0,) * N_BUCKETS
         return GraphStats(n, e, 0.0, 0, 1, 1, 1, 0, zeros, zeros)
-    vec = np.asarray(_stats_pass(jnp.asarray(edges.dst),
-                                 jnp.asarray(edges.weight), n))
+    vec = guard.fetch(_stats_pass(jnp.asarray(edges.dst),
+                                  jnp.asarray(edges.weight), n),
+                      reason="autotune: packed degree/weight histograms")
     deg_hist = tuple(int(x) for x in vec[:N_BUCKETS])
     w_hist = tuple(int(x) for x in vec[N_BUCKETS:2 * N_BUCKETS])
     max_deg, min_w, max_w = (int(x) for x in vec[2 * N_BUCKETS:])

@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import guard
 from repro.common import Timer, get_logger, next_multiple
 from repro.core.engine import Decomposition
 from repro.core.state import EngineState, INF
@@ -528,8 +529,9 @@ def _stage_events(store: EdgeStore, batch: UpdateBatch) -> _Plan:
 def _fetch_repair_planes(c_dev, p_dev, scalars) -> Tuple[np.ndarray, ...]:
     """ONE packed device->host fetch of the repaired planes + int32 stats."""
     n = int(c_dev.shape[0])
-    packed = np.asarray(jnp.concatenate(
-        [c_dev, p_dev] + [jnp.asarray(s, jnp.int32)[None] for s in scalars]))
+    packed = guard.fetch(jnp.concatenate(
+        [c_dev, p_dev] + [jnp.asarray(s, jnp.int32)[None] for s in scalars]),
+        reason="dynamic repair: packed planes + int32 stats")
     return (packed[:n], packed[n:2 * n], *map(int, packed[2 * n:]))
 
 
@@ -621,7 +623,9 @@ def apply_updates(session, batch: UpdateBatch, *,
             alive, fp_base = _forest_repair(
                 store.src, store.dst, store.weight, fc_dev, fp_dev,
                 n=n, k_rounds=rounds)
-            dead = int(np.asarray(jnp.sum(~alive)))
+            dead = int(guard.fetch(jnp.sum(~alive),
+                                   reason="dynamic: dead-node count picks "
+                                          "repair vs rebuild"))
             m.update_syncs += 1
             m.update_supersteps += 1   # the parent-selection edge sweep
             m.pointer_rounds += rounds
@@ -786,8 +790,8 @@ def solve_session_quotient(session, pm) -> Tuple[int, np.ndarray, bool]:
         dq = build_quotient_device(session.edges, dec,
                                    backend=session.backend)
     else:
-        dirty_ids = np.fromiter(st.dirty_centers, np.int64,
-                                count=len(st.dirty_centers))
+        dirty_ids = np.fromiter(  # det: order-insensitive — ids only scatter into boolean dirty masks
+            st.dirty_centers, np.int64, count=len(st.dirty_centers))
         sub_src, sub_dst, sub_w, sub_mask, _ = _dirty_incident_slice(
             store, dec.final_c, dirty_ids)
         dq = quotient_update_device(

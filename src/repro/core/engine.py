@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import guard
 from repro.common import get_logger
 from repro.core.backend import RelaxBackend, dispatch_grow
 from repro.core.state import (
@@ -234,9 +235,11 @@ def _cluster_stage(
     backend object — so repeated decompositions of same-shaped graphs reuse
     one compiled stage program, like the seed's jitted partial_growth did.
 
-    Returns (state, delta, stats) with stats = int32 [8]:
+    Returns (state, delta, stats) with stats = int32 [9]:
     (n_new, steps, grow_calls, resamples, uncovered_after,
-     kernel_launches, kernel_supersteps, dead_blocks).
+     kernel_launches, kernel_supersteps, dead_blocks, delta_end).
+    delta_end rides in the stats vector so the host tracks the Δ ceiling
+    without a second scalar fetch at decomposition end.
     """
 
     def grow(st, dl, half, ni, var):
@@ -280,7 +283,7 @@ def _cluster_stage(
     stats = jnp.stack([
         n_new, steps, grows, resamples,
         uncovered_count(state).astype(jnp.int32),
-        launches, ksteps, dead,
+        launches, ksteps, dead, delta_end,
     ])
     return state, delta_end, stats
 
@@ -322,7 +325,8 @@ def _finalize(
     fc_dev = state.final_c[:n]
     fp_dev = state.final_pathw[:n]
     # ONE packed device->host fetch for both final planes
-    planes = np.asarray(jnp.stack([fc_dev, fp_dev]))
+    planes = guard.fetch(jnp.stack([fc_dev, fp_dev]),
+                         reason="finalize: packed (final_c, final_pathw)")
     metrics.finalize_syncs += 1
     final_c, final_pathw = planes[0], planes[1]
     assert (final_pathw < np.int32(INF)).all(), "uncovered node escaped finalization"
@@ -383,7 +387,8 @@ def run_cluster(
     graph_args = backend.graph_args()
     key = jax.random.PRNGKey(seed)
     delta = jnp.int32(delta0)
-    u_host = n
+    delta_host = delta0   # tracks delta_end via the stats vector — the
+    u_host = n            # Δ ceiling never needs its own scalar fetch
     total_steps = 0
     n_stages = 0
     stage = 0
@@ -397,7 +402,8 @@ def run_cluster(
         )
         # the stage's single host synchronization: the stop-decision scalars
         (n_new, steps, grows, resamples, u_host,
-         launches, ksteps, dead) = map(int, np.asarray(stats))
+         launches, ksteps, dead, delta_host) = map(int, guard.fetch(
+             stats, reason="stage stop decision: packed int32 stats"))
         metrics.host_syncs += 1
         metrics.grow_calls += grows
         metrics.resamples += resamples
@@ -416,7 +422,7 @@ def run_cluster(
 
     metrics.growing_steps = total_steps
     metrics.state_transfers = backend.transfers - transfers0
-    return _finalize(state, n, int(delta), n_stages, total_steps, metrics)
+    return _finalize(state, n, delta_host, n_stages, total_steps, metrics)
 
 
 def run_cluster2(
@@ -452,7 +458,8 @@ def run_cluster2(
             jnp.float32(p), num_it, graph_args, spec=spec, n=n,
         )
         (n_new, steps, u_host,
-         launches, ksteps, dead) = map(int, np.asarray(stats))
+         launches, ksteps, dead) = map(int, guard.fetch(
+             stats, reason="cluster2 stage: packed int32 stats"))
         metrics.host_syncs += 1
         metrics.kernel_launches += launches
         metrics.kernel_supersteps += ksteps
@@ -602,7 +609,8 @@ def run_oneshot(
         num_it, graph_args, spec=spec, n=n, deterministic=deterministic,
     )
     # the decomposition's single host synchronization
-    (n_new, steps, u_host, launches, ksteps, dead) = map(int, np.asarray(stats))
+    (n_new, steps, u_host, launches, ksteps, dead) = map(int, guard.fetch(
+        stats, reason="oneshot: packed int32 stats, the only sync"))
     metrics.stages = 1
     metrics.host_syncs = 1
     metrics.grow_calls = 1

@@ -46,6 +46,7 @@ from repro.core.quotient import (
     quotient_diameter,
     solve_device_quotient,
 )
+from repro.analysis import guard
 from repro.core.session import GraphSession, tau_for
 
 log = get_logger("repro.estimators")
@@ -521,6 +522,7 @@ def _sssp_from(session: GraphSession, source: int, delta: Optional[int]):
 
     n = session.n_nodes
     src, dst, w = session.flat_device_edges()
+    # dtype: delta=None means unbucketed; None and 0 pick the same bound
     dtype, inf = sssp_dtype_for(n, session.max_weight, delta or 0)
     with enable_x64():
         infj = jnp.asarray(inf, dtype)
@@ -531,8 +533,9 @@ def _sssp_from(session: GraphSession, source: int, delta: Optional[int]):
         else:
             d, k = _delta_stepping_loop(src, dst, wd, d0,
                                         jnp.asarray(delta, dtype), infj, n)
-        out = np.asarray(jnp.concatenate(
-            [d.astype(jnp.int64), k[None].astype(jnp.int64)]))
+        out = guard.fetch(jnp.concatenate(
+            [d.astype(jnp.int64), k[None].astype(jnp.int64)]),
+            reason="sssp estimator: packed (dist plane, supersteps)")
     return out[:n], int(out[n]), inf
 
 
@@ -573,7 +576,9 @@ class DeltaSteppingEstimator:
         # (the realized ecc stays a valid lower bound either way).
         return DiameterEstimate(
             phi_approx=2 * ecc, phi_quotient=0, radius=ecc, n_clusters=0,
-            growing_steps=supersteps, n_stages=1, delta_end=self.delta or 0,
+            growing_steps=supersteps, n_stages=1,
+            # dtype: delta=None (unbucketed BF) reports delta_end=0
+            delta_end=self.delta or 0,
             seconds=t.seconds, connected=connected, pipeline=pm,
             method=self.name, lower=ecc, upper=2 * ecc if connected else None)
 

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.analysis import guard
 from repro.common import next_multiple
 from repro.core.cluster import Decomposition
 from repro.graph.segment_ops import segment_min_triple
@@ -167,9 +168,10 @@ def fetch_quotient_counters(dq: DeviceQuotient) -> Tuple[int, int, int, int]:
     ``(n_clusters, n_edges, max_weight, weight_sum)``. Callers account the
     sync (``PipelineMetrics.quotient_syncs``) themselves."""
     with enable_x64():
-        kmws = np.asarray(jnp.stack([
+        kmws = guard.fetch(jnp.stack([
             dq.n_clusters.astype(jnp.int64), dq.n_edges.astype(jnp.int64),
-            dq.max_weight, dq.weight_sum]))
+            dq.max_weight, dq.weight_sum]),
+            reason="quotient: packed (k, m, wmax, wsum) counters")
     return int(kmws[0]), int(kmws[1]), int(kmws[2]), int(kmws[3])
 
 
@@ -224,7 +226,8 @@ def build_quotient(edges: EdgeList, dec: Decomposition, backend=None) -> Quotien
         return QuotientGraph(
             n_clusters=len(centers), center_ids=centers.astype(np.int32),
             src=z, dst=z, weight=z.astype(np.int64))
-    k, m = map(int, np.asarray(jnp.stack([dq.n_clusters, dq.n_edges])))
+    k, m = map(int, guard.fetch(jnp.stack([dq.n_clusters, dq.n_edges]),
+                                reason="host quotient: (k, m) counters"))
     with enable_x64():  # int64 arrays must be sliced with x64 tracing on
         return QuotientGraph(
             n_clusters=k,
@@ -459,9 +462,10 @@ def solve_device_quotient(
             # invalid (padding) slots carry INF64 -> map onto the int32 INF
             qw = jnp.where(qw >= jnp.int64(INF64),
                            jnp.int64(2**31 - 1), qw).astype(jnp.int32)
-        out = np.asarray(_solve_kernel(
+        out = guard.fetch(_solve_kernel(
             dq.src[:m_pad], dq.dst[:m_pad], qw,
-            jnp.int32(k), k_pad=k_pad))
+            jnp.int32(k), k_pad=k_pad),
+            reason="quotient solve: packed (diam, connected, steps, ecc)")
     return int(out[0]), out[3:3 + k], bool(out[1]), int(out[2])
 
 
@@ -537,7 +541,7 @@ def quotient_diameter_minplus(q: QuotientGraph) -> Tuple[int, bool]:
         steps = int(np.ceil(np.log2(max(k - 1, 1)))) or 1
         for _ in range(steps):
             d = _minplus_square(d)
-    arr = np.asarray(d)
+    arr = guard.fetch(d, reason="minplus oracle: squared distance matrix")
     finite = arr < big
     connected = bool(finite.all())
     return int(arr[finite].max()), connected

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import guard
 from repro.graph.structures import EdgeList
 
 INF = jnp.int32(2**31 - 1)
@@ -110,8 +111,9 @@ def bellman_ford(edges: EdgeList, source: int) -> SSSPResult:
         infj = jnp.asarray(inf, dtype)
         d0 = jnp.full(n, infj, dtype=dtype).at[source].set(0)
         d, k = _bf_loop(*_edge_arrays(edges, dtype), d0, infj, n)
-        dist = np.asarray(d)
-    return SSSPResult(dist=dist, supersteps=int(k), inf=inf)
+        dist = guard.fetch(d, reason="sssp baseline: distance plane")
+        k = int(guard.fetch(k, reason="sssp baseline: superstep counter"))
+    return SSSPResult(dist=dist, supersteps=k, inf=inf)
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
@@ -161,15 +163,17 @@ def multi_source_bellman_ford(edges: EdgeList, sources) -> MultiSSSPResult:
     wmax = int(edges.weight.max()) if edges.n_edges else 1
     dtype, inf = sssp_dtype_for(n, wmax)
     with enable_x64():
-        inf = jnp.asarray(inf, dtype)
-        d0 = jnp.full((n, len(sources)), inf, dtype=dtype)
+        infj = jnp.asarray(inf, dtype)
+        d0 = jnp.full((n, len(sources)), infj, dtype=dtype)
         d0 = d0.at[jnp.asarray(sources), jnp.arange(len(sources))].set(0)
         d, k = batched_bf_loop(
             jnp.asarray(edges.src), jnp.asarray(edges.dst),
-            jnp.asarray(edges.weight).astype(dtype), d0, inf, n)
-        dist = np.asarray(d).T  # public contract stays [S, n]
-    return MultiSSSPResult(dist=dist, supersteps=int(k),
-                           connected=bool((dist < int(inf)).all()))
+            jnp.asarray(edges.weight).astype(dtype), d0, infj, n)
+        # public contract stays [S, n]
+        dist = guard.fetch(d, reason="multi-sssp: distance planes").T
+        k = int(guard.fetch(k, reason="multi-sssp: superstep counter"))
+    return MultiSSSPResult(dist=dist, supersteps=k,
+                           connected=bool((dist < inf).all()))
 
 
 @partial(jax.jit, static_argnames=("n_nodes",))
@@ -250,8 +254,9 @@ def delta_stepping(edges: EdgeList, source: int, delta: int) -> SSSPResult:
             *_edge_arrays(edges, dtype), d0, jnp.asarray(delta, dtype),
             infj, n,
         )
-        dist = np.asarray(d)
-    return SSSPResult(dist=dist, supersteps=int(k), inf=inf)
+        dist = guard.fetch(d, reason="delta-stepping: distance plane")
+        k = int(guard.fetch(k, reason="delta-stepping: superstep counter"))
+    return SSSPResult(dist=dist, supersteps=k, inf=inf)
 
 
 def diameter_2approx_sssp(edges: EdgeList, seed: int = 0) -> Tuple[int, int, int, bool]:

@@ -52,6 +52,7 @@ def cin_layer_pallas(
     w_flat = w.reshape(H2, H * m)
 
     grid = (B, D // dt)
+    # pallas: LM demo kernel — D % d_tile asserted above, tiles fixed by caller
     out = pl.pallas_call(
         functools.partial(_cin_kernel, m=m, h=H),
         grid=grid,

@@ -159,12 +159,13 @@ def flash_attention_pallas(
         grid=grid,
         in_specs=[q_spec, kv_spec, kv_spec],
         out_specs=o_spec,
-        scratch_shapes=[
+        scratch_shapes=[  # pallas: bq <= seq block, footprint bounded by block sizing above
             pltpu.VMEM((bq, 128), jnp.float32),
             pltpu.VMEM((bq, 128), jnp.float32),
             pltpu.VMEM((bq, D), jnp.float32),
         ],
     )
+    # pallas: attention blocks are lane-padded by the caller, not the graph tiler
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,

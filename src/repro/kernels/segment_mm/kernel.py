@@ -83,6 +83,7 @@ def segment_mm_pallas(
     kern = functools.partial(
         _segment_mm_kernel, node_tile=node_tile, edge_block=edge_block
     )
+    # pallas: tiles validated by edge_relax.validate_tiling in the calling backend
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,

@@ -155,7 +155,8 @@ def main() -> int:
         mesh = host_device_mesh()
         if args.partition == "cluster":
             # pilot decomposition -> locality-aware relabeling -> smaller halo
-            pilot = cluster(g, max(args.tau or 16, 4), seed=args.seed)
+            pilot = cluster(g, max(16 if args.tau is None else args.tau, 4),
+                            seed=args.seed)
             n_dev = int(jax.device_count())
             perm = partition_for_backend(g, "sharded", n_dev, pilot.final_c)
             g, _ = apply_partition(g, perm)
@@ -173,7 +174,7 @@ def main() -> int:
         log.info("autotuned: tau=%d tau_solve=%d levels=%d delta0=%d "
                  "tiling=(%d,%d) fuse=%d", t.tau, t.tau_solve, t.levels,
                  t.delta_init, t.node_tile, t.edge_block, t.fuse)
-    if args.levels:
+    if args.levels > 0:
         estimator = CascadeEstimator(levels=args.levels)
     elif sess.tuning is not None:
         estimator = None  # session default: tuned cascade depth

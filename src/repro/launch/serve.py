@@ -152,42 +152,57 @@ def serve_graph_diameter(args) -> int:
         sessions = [pool.open(g, tau=args.tau, e_pad=e_pad) for g in graphs]
 
         worst_syncs, failures = 0, []
+        # per-query results are COLLECTED here and logged in one pass after
+        # the loop: the timed serving loop does no formatting/IO, and every
+        # scalar it touches rides the batched guard.fetch sites inside the
+        # estimators (sync-lint contract — see repro.analysis)
+        records: list[tuple] = []  # (graph, round, result, syncs, dt)
+        update_lines: list[tuple] = []
+        from repro.analysis import guard
+
         t0 = time.perf_counter()
         cold: list[float] = []  # first query per session (session 0 compiles)
         warm: list[float] = []
-        for round_idx in range(args.queries):
-            if round_idx == 1:
-                # the SessionMetrics contract: from here on, NOTHING may
-                # build a backend or upload an edge array
-                builds0 = pool.metrics.backend_builds
-                uploads0 = pool.metrics.edge_uploads
-            if round_idx and traces:
-                # replay: one mutation batch per session between rounds
-                # (update work counts in DynamicMetrics, not the warm-query
-                # residency counters — the buffers are mutated IN PLACE)
+        with guard.measured_transfers() as meter:
+            for round_idx in range(args.queries):
+                if round_idx == 1:
+                    # the SessionMetrics contract: from here on, NOTHING may
+                    # build a backend or upload an edge array
+                    builds0 = pool.metrics.backend_builds
+                    uploads0 = pool.metrics.edge_uploads
+                if round_idx and traces:
+                    # replay: one mutation batch per session between rounds
+                    # (update work counts in DynamicMetrics, not the
+                    # warm-query residency counters — the buffers are
+                    # mutated IN PLACE)
+                    for i, sess in enumerate(sessions):
+                        if round_idx - 1 < len(traces[i]):
+                            rep = sess.apply_updates(traces[i][round_idx - 1])
+                            update_lines.append((i, round_idx - 1, rep))
                 for i, sess in enumerate(sessions):
-                    if round_idx - 1 < len(traces[i]):
-                        rep = sess.apply_updates(traces[i][round_idx - 1])
-                        log.info("graph[%d] u%d: %s sweeps=%d dead=%d",
-                                 i, round_idx - 1, rep.action,
-                                 rep.supersteps, rep.dead_nodes)
-            for i, sess in enumerate(sessions):
-                tq = time.perf_counter()
-                res = sess.estimate(estimator)
-                dt = time.perf_counter() - tq
-                (cold if round_idx == 0 else warm).append(dt)
-                worst_syncs = max(worst_syncs, _query_syncs(res))
-                if isinstance(res, DiameterInterval):
-                    log.info("graph[%d] q%d: diameter in [%d, %d] "
-                             "connected=%s host_syncs=%d %.3fs",
-                             i, round_idx, res.lower, res.upper,
-                             res.connected, _query_syncs(res), dt)
-                else:
-                    log.info("graph[%d] q%d: phi=%d clusters=%d connected=%s "
-                             "host_syncs=%d %.3fs", i, round_idx,
-                             res.phi_approx, res.n_clusters, res.connected,
-                             _query_syncs(res), dt)
+                    tq = time.perf_counter()
+                    res = sess.estimate(estimator)
+                    dt = time.perf_counter() - tq
+                    (cold if round_idx == 0 else warm).append(dt)
+                    syncs = _query_syncs(res)
+                    worst_syncs = max(worst_syncs, syncs)
+                    records.append((i, round_idx, res, syncs, dt))
         total = time.perf_counter() - t0
+
+        for i, u_idx, rep in update_lines:
+            log.info("graph[%d] u%d: %s sweeps=%d dead=%d", i, u_idx,
+                     rep.action, rep.supersteps, rep.dead_nodes)
+        for i, round_idx, res, syncs, dt in records:
+            if isinstance(res, DiameterInterval):
+                log.info("graph[%d] q%d: diameter in [%d, %d] connected=%s "
+                         "host_syncs=%d %.3fs", i, round_idx, res.lower,
+                         res.upper, res.connected, syncs, dt)
+            else:
+                log.info("graph[%d] q%d: phi=%d clusters=%d connected=%s "
+                         "host_syncs=%d %.3fs", i, round_idx, res.phi_approx,
+                         res.n_clusters, res.connected, syncs, dt)
+        log.info("measured device->host transfers: %d over %d queries "
+                 "(all via guard.fetch)", meter.transfers, len(records))
 
         m = pool.metrics
         if args.queries > 1:
@@ -350,7 +365,7 @@ def main() -> int:
     jax.block_until_ready(logits)
     t_decode = time.time() - t0
 
-    out = np.asarray(jnp.concatenate(toks, axis=1))
+    out = np.asarray(jnp.concatenate(toks, axis=1))  # sync: one post-loop fetch of all decoded ids
     log.info("prefill %.2fs (%.1f tok/s)  decode %.2fs (%.1f tok/s/seq)",
              t_prefill, args.batch * args.prompt_len / t_prefill,
              t_decode, args.gen / t_decode)

@@ -110,13 +110,15 @@ def main() -> int:
             cursor.step += 1
             if cursor.step % args.log_every == 0:
                 tok_s = args.batch * args.seq_len / max(t.seconds, 1e-9)
+                # sync: LM train log line, gated by --log-every
                 log.info("step %d loss %.4f gnorm %.3f lr %.2e  %.0f tok/s",
-                         cursor.step, float(loss), float(stats["grad_norm"]),
+                         cursor.step, float(loss), float(stats["grad_norm"]),  # sync: see above
                          float(stats["lr"]), tok_s)
             if cursor.step % tc.checkpoint_every == 0 or guard.should_stop:
                 ckpt.save(tc.checkpoint_dir, cursor.step,
                           {"params": params, "m": opt.m, "v": opt.v},
                           extra={"cursor": cursor.as_dict(),
+                                 # sync: checkpoint manifest scalar
                                  "opt_step": int(opt.step)},
                           keep=tc.keep_checkpoints)
             if guard.should_stop:

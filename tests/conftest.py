@@ -7,3 +7,19 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def transfer_guarded():
+    """Engine-loop tests run under ``jax.transfer_guard_device_to_host``
+    set to "disallow": on TPU/GPU any device->host transfer that does NOT
+    go through the sanctioned ``repro.analysis.guard.fetch`` raises
+    immediately, so unannotated implicit transfers fail tier-1 rather than
+    only lint. (On CPU the guard is inert — zero-copy buffer donation —
+    which is why the static sync-lint exists; see guard.py.) Yields the
+    :class:`TransferMeter` counting the sanctioned fetches, so tests can
+    assert ``meter.transfers == metrics.host_syncs + ...`` equalities."""
+    from repro.analysis import guard
+
+    with guard.measured_transfers("disallow") as meter:
+        yield meter
