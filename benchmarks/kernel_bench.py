@@ -246,6 +246,150 @@ def run_dynamic_bench(n: int = 20_000, n_batches: int = 6):
     return block
 
 
+def run_stream_bench(n: int = 2_000_000, shards: int = 4,
+                     preempt_after: int = 2, lower_rounds: int = 0,
+                     levels: int = 2, tau_solve: int = 64,
+                     seed: int = 1, out_path: str = BENCH_ENGINE):
+    """The out-of-core streaming contract: a graph 100x the n=20k engine
+    bench decomposes through a partition-sharded ``GraphStore`` under
+    SIMULATED MID-RUN PREEMPTION — a real SIGTERM delivered at a stage
+    boundary — then resumes from the durable checkpoint and finishes with
+    a byte-identical certified bracket. Asserts:
+
+      (a) the store's static halo plan moves STRICTLY fewer bytes per
+          superstep than the full-plane all-gather baseline, and — when
+          more than one device is visible — the measured
+          ``EngineMetrics.halo_bytes`` of the sharded run stays strictly
+          below its ``fullplane_bytes`` counterfactual;
+      (b) the interrupted run really was killed mid-decomposition
+          (``Preempted`` escaped, >= 1 durable save);
+      (c) the resumed run restores exactly once and its [lower, upper]
+          interval equals the uninterrupted reference bracket.
+
+    CI re-enters this function at small n (stream-smoke job); the
+    recorded BENCH block is the full-scale run.
+    """
+    import tempfile
+
+    from repro.config.base import GraphEngineConfig
+    from repro.core import (CascadeEstimator, IntervalEstimator,
+                            LowerBoundEstimator, open_session)
+    from repro.graph import GraphStore, random_geometric
+    from repro.runtime.fault import Preempted, PreemptionGuard
+
+    g = random_geometric(n, avg_degree=3.0, seed=seed)
+    multi = jax.device_count() >= shards > 1
+    store = GraphStore(g, n_shards=shards, compress=True)
+    halo_b = store.halo_bytes_per_superstep()
+    full_b = store.fullplane_bytes_per_superstep()
+    assert 0 < halo_b < full_b, (
+        f"halo plan moves {halo_b} B/superstep, full-plane baseline "
+        f"{full_b} — sharding must strictly shrink the collective")
+    cfg = GraphEngineConfig(backend="sharded" if multi else "single",
+                            comm="halo", seed=seed)
+    # The decomposition (the preemption target) goes FIRST so the killed
+    # run dies cheaply at its stage boundary; the cascade keeps the solve
+    # off the quadratic flat-quotient path at full scale. The
+    # farthest-point lower is optional (``lower_rounds=0`` skips it —
+    # each round is a full Bellman-Ford, intractable at n=2M on CPU;
+    # the bracket then certifies [0, upper]).
+    panel = (CascadeEstimator(levels=levels, tau_solve=tau_solve),)
+    if lower_rounds > 0:
+        panel = panel + (LowerBoundEstimator(rounds=lower_rounds),)
+
+    # uninterrupted reference bracket
+    t0 = time.perf_counter()
+    sess = open_session(None, cfg, store=store)
+    iv_ref = sess.estimate(IntervalEstimator(estimators=panel))
+    dt_ref = time.perf_counter() - t0
+    ref_pm = iv_ref.pipeline
+    if multi:
+        assert 0 < ref_pm.halo_bytes < ref_pm.fullplane_bytes, (
+            f"measured halo bytes {ref_pm.halo_bytes} not strictly below "
+            f"full-plane {ref_pm.fullplane_bytes}")
+    sess.close()
+
+    # interrupted run: a REAL SIGTERM fires at a stage boundary of the
+    # decomposition; the durable save lands before Preempted escapes
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_stream_ckpt_")
+    pg = PreemptionGuard()
+    sess_i = open_session(None, cfg, store=store,
+                          checkpoint_dir=ckpt_dir, guard=pg)
+    sess_i.checkpointer.preempt_after_stage = preempt_after
+    t0 = time.perf_counter()
+    preempted_at = None
+    try:
+        with pg:
+            sess_i.estimate(IntervalEstimator(estimators=panel))
+    except Preempted as p:
+        preempted_at = p.stage
+    dt_kill = time.perf_counter() - t0
+    assert preempted_at is not None, (
+        "simulated preemption never fired — decomposition finished before "
+        f"stage {preempt_after}")
+    saves = sess_i.checkpointer.saves
+    assert saves >= 1, "killed run left no durable checkpoint"
+    sess_i.close()
+
+    # resume: restore once, finish, byte-identical bracket
+    t0 = time.perf_counter()
+    sess_r = open_session(None, cfg, store=store, checkpoint_dir=ckpt_dir,
+                          resume=True, guard=PreemptionGuard())
+    iv_res = sess_r.estimate(IntervalEstimator(estimators=panel))
+    dt_res = time.perf_counter() - t0
+    assert sess_r.checkpointer.restores == 1, sess_r.checkpointer.restores
+    assert (iv_res.lower, iv_res.upper) == (iv_ref.lower, iv_ref.upper), (
+        f"resumed bracket [{iv_res.lower}, {iv_res.upper}] != reference "
+        f"[{iv_ref.lower}, {iv_ref.upper}] — resume must be byte-identical")
+    assert iv_res.connected == iv_ref.connected
+    sess_r.checkpointer.complete()
+    sess_r.close()
+
+    block = {
+        "graph": f"road-like-n{n}",
+        "n_nodes": g.n_nodes,
+        "n_edges": g.n_edges,
+        "scale_vs_engine_bench": round(n / 20_000, 1),
+        "shards": store.n_shards,
+        "backend": cfg.backend,
+        "compress": True,
+        "resident_bytes": store.resident_bytes(),
+        "raw_bytes": store.raw_bytes(),
+        "compression_ratio": round(
+            store.raw_bytes() / max(store.resident_bytes(), 1), 3),
+        "halo_k": store.halo_k(),
+        "halo_bytes_per_superstep": halo_b,
+        "fullplane_bytes_per_superstep": full_b,
+        "halo_fraction": round(halo_b / max(full_b, 1), 4),
+        "measured_halo_bytes": ref_pm.halo_bytes,
+        "measured_fullplane_bytes": ref_pm.fullplane_bytes,
+        "preempted_at_stage": preempted_at,
+        "checkpoint_saves": saves,
+        "checkpoint_restores": 1,
+        "checkpoint_syncs": ref_pm.checkpoint_syncs,
+        "interval_lower": iv_ref.lower,
+        "interval_upper": iv_ref.upper,
+        "interval_lower_resumed": iv_res.lower,
+        "interval_upper_resumed": iv_res.upper,
+        "bracket_identical": True,
+        "connected": iv_ref.connected,
+        "reference_s": round(dt_ref, 2),
+        "killed_run_s": round(dt_kill, 2),
+        "resumed_run_s": round(dt_res, 2),
+    }
+    # merge into BENCH_engine.json without clobbering the engine rows
+    try:
+        with open(out_path) as f:
+            row = json.load(f)
+    except (OSError, ValueError):
+        row = {}
+    row["stream"] = block
+    with open(out_path, "w") as f:
+        json.dump(row, f, indent=1)
+    print("stream:", json.dumps(block))
+    return block
+
+
 def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
                           out_path: str = BENCH_ENGINE,
                           warm_queries: int = 3):
@@ -523,4 +667,15 @@ def run_engine_sync_bench(n: int = 20_000, tau: int = 32,
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    if len(sys.argv) > 1 and sys.argv[1] == "stream":
+        # standalone entry so CI / large runs can set XLA_FLAGS (e.g.
+        # --xla_force_host_platform_device_count=4) before jax initializes
+        n_arg = int(sys.argv[2]) if len(sys.argv) > 2 else 2_000_000
+        shards_arg = int(sys.argv[3]) if len(sys.argv) > 3 else 4
+        rounds_arg = int(sys.argv[4]) if len(sys.argv) > 4 else 0
+        run_stream_bench(n=n_arg, shards=shards_arg,
+                         lower_rounds=rounds_arg)
+    else:
+        run()

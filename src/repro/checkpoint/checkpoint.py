@@ -19,11 +19,13 @@ import os
 import re
 import shutil
 import tempfile
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.analysis import guard
 from repro.common import get_logger
 from repro.runtime.fault import retriable
 
@@ -67,9 +69,19 @@ def save(
     os.makedirs(tmp)
 
     flat = _flatten(tree)
-    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    manifest = {"step": step, "extra": extra or {}, "leaves": {},
+                # det: wall-clock is write-provenance metadata only; restore never reads it back into compute
+                "written_at": time.time()}
     for key, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))  # sync: checkpoint save materializes every leaf by design
+        if isinstance(leaf, jax.Array):
+            # the sanctioned device->host path: metered by any active
+            # TransferMeter, so checkpoint durability cost shows up as
+            # EngineMetrics.checkpoint_syncs instead of hiding in the
+            # measured/counted sync-equality contract. Host numpy leaves
+            # (GraphStore mirrors) are not transfers and skip the meter.
+            leaf = guard.fetch(
+                leaf, reason=f"checkpoint save: materialize device leaf {key}")
+        arr = np.asarray(leaf)
         fname = f"{key}.npy"
         with open(os.path.join(tmp, fname), "wb") as f:
             np.save(f, arr)

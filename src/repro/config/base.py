@@ -209,7 +209,9 @@ class GraphEngineConfig(ArchConfig):
     use_cluster2: bool = False       # paper optimization (1): default CLUSTER
     seed: int = 0
     backend: str = "single"          # single | sharded | pallas (core/backend.py)
-    comm: str = "allgather"          # sharded backend collective: allgather | halo
+    comm: str = "halo"               # sharded backend collective: halo (static
+                                     # boundary-row exchange, default) | allgather
+                                     # (full-plane baseline); byte-identical results
     relax_impl: str = "auto"         # pallas backend kernel impl: auto | ref | pallas
     autotune: str = "off"            # off | auto | record (core/autotune.py)
     fuse_supersteps: int = 0         # pallas megakernel fusion depth

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.delta_growing import GrowthStats, growth_loop, partial_growth
 from repro.core.state import EngineState, init_state, pad_state, relay_planes
+from repro.graph.storage import EdgeStore, GraphStore
 from repro.graph.structures import EdgeList
 
 
@@ -127,11 +128,29 @@ def dispatch_grow(spec: GrowSpec, graph_args, state, delta, half_target,
 
 
 class SingleDeviceBackend:
-    """Flat destination-indexed edge arrays + jitted while_loop growth."""
+    """Flat destination-indexed edge arrays + jitted while_loop growth.
+
+    Accepts either a host ``EdgeList`` (uploaded here, the classic path)
+    or an ``EdgeStore``/``GraphStore`` — then the store's RESIDENT device
+    buffers are bound directly (no re-upload; inert free slots are the
+    same 0->0/w=1 padding pooled sessions use, invisible to relaxation)
+    and the store keeps ownership: dynamic updates scatter in place and
+    ``rebind`` after capacity growth.
+    """
 
     kind = "single"
 
-    def __init__(self, edges: EdgeList):
+    def __init__(self, edges):
+        if isinstance(edges, EdgeStore):
+            store = edges
+            store.ensure_device()
+            self.n_nodes = store.n_nodes
+            self.n_pad = store.n_nodes
+            self.src = store.src
+            self.dst = store.dst
+            self.weight = store.weight
+            self.transfers = 0
+            return
         self.n_nodes = edges.n_nodes
         self.n_pad = edges.n_nodes
         self.src = jnp.asarray(edges.src)
@@ -374,6 +393,19 @@ class ShardedBackend:
         return state, GrowthStats(steps=k, reached=reached,
                                   changed_last=changed)
 
+    # -- wire-byte accounting (read by engine._comm_accounting) ----------
+
+    @property
+    def halo_bytes_per_step(self) -> int:
+        """Collective plane-row bytes one superstep moves under the
+        engine's comm mode — exact: the plan is static, no sync needed."""
+        return self.eng.comm_bytes_per_superstep()
+
+    @property
+    def fullplane_bytes_per_step(self) -> int:
+        """What the full-plane all-gather baseline would move."""
+        return self.eng.fullplane_bytes_per_superstep()
+
 
 # ---------------------------------------------------------------------------
 # factory
@@ -381,11 +413,11 @@ class ShardedBackend:
 
 
 def make_backend(
-    edges: EdgeList,
+    edges,
     spec="single",
     *,
     mesh=None,
-    comm: str = "allgather",
+    comm: str = "halo",
     impl: str = "auto",
     node_tile: int = 0,
     edge_block: int = 0,
@@ -393,15 +425,28 @@ def make_backend(
 ) -> RelaxBackend:
     """Resolve a backend from a config spec (or pass one through).
 
+    ``edges`` may be an ``EdgeList`` or a ``graph.storage`` store: the
+    single kind binds the store's resident device buffers directly, the
+    sharded kind reuses a ``GraphStore``'s prebuilt slab/halo layout via
+    ``sharded_graph()`` when the shard count matches the mesh, and the
+    pallas kind re-blocks from the store's valid edges.
+
+    ``comm`` defaults to ``"halo"``: supersteps exchange ONLY the static
+    halo plan's boundary plane rows (``"allgather"`` — the full-plane
+    baseline the halo_bytes metric is measured against — remains
+    selectable and byte-identical in results).
+
     ``node_tile`` / ``edge_block`` / ``fuse`` apply to the pallas kind only
     (0 = kernel defaults / unfused); typically filled in by the autotuner.
     """
     if not isinstance(spec, str):
         return spec  # already a RelaxBackend
+    store = edges if isinstance(edges, EdgeStore) else None
     if spec in ("", "single"):
         return SingleDeviceBackend(edges)
     if spec == "pallas":
-        return PallasBackend(edges, impl=impl, node_tile=node_tile or None,
+        e = store.edge_list() if store is not None else edges
+        return PallasBackend(e, impl=impl, node_tile=node_tile or None,
                              edge_block=edge_block or None, fuse=fuse)
     if spec == "sharded":
         from repro.core.distributed import DistributedEngine
@@ -410,6 +455,11 @@ def make_backend(
             from repro.launch.mesh import host_device_mesh
 
             mesh = host_device_mesh()
-        return ShardedBackend(DistributedEngine(edges, mesh, comm=comm))
+        graph = None
+        if isinstance(store, GraphStore) and store.n_shards > 1:
+            graph = store.sharded_graph(build_halo=(comm == "halo"))
+        e = store.edge_list() if store is not None else edges
+        return ShardedBackend(DistributedEngine(e, mesh, comm=comm,
+                                                graph=graph))
     raise ValueError(f"unknown backend {spec!r} "
                      "(expected single | sharded | pallas)")

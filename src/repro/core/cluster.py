@@ -74,6 +74,7 @@ def cluster(
     backend: Union[str, RelaxBackend] = "single",
     mode: str = "stages",
     deterministic: bool = False,
+    checkpointer=None,
 ) -> Decomposition:
     """Paper Algorithm 1. ``variant`` in {"stop", "complete"} (Table 2).
 
@@ -87,10 +88,19 @@ def cluster(
     here (no tuning record in scope — sessions resolve it against theirs).
     ``deterministic`` applies to oneshot only: hash-derived shifts make the
     output a seed-independent function of the graph.
+
+    ``checkpointer`` (a ``core.engine.StageCheckpointer``) makes the staged
+    run preemption-safe: state is saved at stage boundaries and a resumed
+    run finishes with a byte-identical decomposition. Oneshot mode has no
+    stage boundaries, so the checkpointer is ignored there (one device
+    program either completes or re-runs from scratch).
     """
     be = _resolve_backend(edges, backend, relax_fn)
     mode = resolve_engine_mode(mode)
     if mode == "oneshot":
+        if checkpointer is not None:
+            log.info("oneshot mode has no stage boundaries; "
+                     "checkpointer ignored")
         return run_oneshot(
             edges, be, tau,
             gamma=gamma, seed=seed, deterministic=deterministic,
@@ -103,6 +113,7 @@ def cluster(
         seed=seed, max_stages=max_stages,
         max_steps_per_phase=max_steps_per_phase,
         threshold_const=threshold_const,
+        checkpointer=checkpointer,
     )
 
 

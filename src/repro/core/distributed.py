@@ -198,24 +198,39 @@ def _relax_local(src_d, src_c, src_p, src_rw0, src_rc, src_rp,
 class DistributedEngine:
     """shard_map executor for Δ-growing supersteps on a device mesh.
 
-    ``comm``: "allgather" broadcasts the six source planes each superstep
-    (baseline; collective bytes = 6·4·n per device). "halo" exchanges only the
-    statically-needed boundary states via all_to_all (optimized; bytes =
-    6·4·P·K, typically ≪ n with locality-aware partitions).
+    ``comm``: "halo" (default) exchanges only the statically-needed boundary
+    states via all_to_all (bytes = 6·4·P·P·K per superstep, typically ≪ n
+    with locality-aware partitions). "allgather" broadcasts the six source
+    planes each superstep (baseline; collective bytes = 6·4·n_pad·P).
+    Both produce byte-identical planes; comm is a pure traffic knob.
+
+    ``graph``: optionally a prebuilt ``ShardedGraph`` (e.g. from
+    ``GraphStore.sharded_graph()``) so the relabel/shard work isn't repeated;
+    it is validated against the mesh and rebuilt from ``edges`` on mismatch.
     """
 
     def __init__(
         self,
         edges: EdgeList,
         mesh: Mesh,
-        comm: str = "allgather",
+        comm: str = "halo",
         axis_names: Optional[Tuple[str, ...]] = None,
+        graph: Optional[ShardedGraph] = None,
     ):
         self.mesh = mesh
         self.axes = tuple(axis_names or mesh.axis_names)
         self.n_devices = int(np.prod([mesh.shape[a] for a in self.axes]))
         self.comm = comm
-        self.graph = shard_graph(edges, self.n_devices, build_halo=(comm == "halo"))
+        if graph is not None and graph.n_devices != self.n_devices:
+            log.warning(
+                "prebuilt ShardedGraph has %d shards but mesh has %d devices; "
+                "resharding from edges", graph.n_devices, self.n_devices,
+            )
+            graph = None
+        if graph is not None and comm == "halo" and graph.send_ids is None:
+            graph = None  # prebuilt without a halo plan; rebuild with one
+        self.graph = graph if graph is not None else shard_graph(
+            edges, self.n_devices, build_halo=(comm == "halo"))
         self.q = self.graph.nodes_per_device
         self._step = self._build_superstep()
         self._growth = self._build_growth_loop()
@@ -239,6 +254,25 @@ class DistributedEngine:
             out.append(jax.device_put(g.src_is_local, es))
             out.append(jax.device_put(g.src_local_idx, es))
         return tuple(out)
+
+    # -- communication accounting (bytes per superstep, whole mesh) ---------
+    def comm_bytes_per_superstep(self) -> int:
+        """Bytes moved across the mesh by one superstep's source-plane
+        exchange (6 int32 planes per node row = 24 B/row)."""
+        if self.n_devices <= 1:
+            return 0
+        if self.comm == "halo":
+            # the all_to_all ships a fixed [P, K] table per device (the
+            # self-row is allocated on the wire plan even though it stays
+            # local), so the conservative count is P·P·K rows mesh-wide.
+            return 24 * self.n_devices * self.n_devices * self.graph.halo_k
+        return self.fullplane_bytes_per_superstep()
+
+    def fullplane_bytes_per_superstep(self) -> int:
+        """Bytes one full-plane all-gather of the six planes would move."""
+        if self.n_devices <= 1:
+            return 0
+        return 24 * self.graph.n_pad * self.n_devices
 
     # -- superstep bodies (run inside shard_map; arrays are per-device) -----
     def _gather_src_planes(self, planes_local, src, recv_slot, send_ids,

@@ -64,7 +64,8 @@ from repro.common import Timer, get_logger, next_multiple
 from repro.core.engine import Decomposition
 from repro.core.state import EngineState, INF
 from repro.graph.segment_ops import segment_min_triple
-from repro.graph.structures import MAX_WEIGHT, EdgeStore
+from repro.graph.storage import EdgeStore, GraphStore
+from repro.graph.structures import MAX_WEIGHT
 
 log = get_logger("repro.dynamic")
 
@@ -415,7 +416,15 @@ def ensure_dynamic(session) -> DynamicState:
     if st is not None:
         return st
     session._check_open()
-    store = EdgeStore(session.edges)
+    # a store-backed session keeps ITS storage layer (spill/checkpoint
+    # seams stay live under updates); otherwise build a single-shard
+    # GraphStore — EdgeStore semantics plus the slab/halo introspection
+    store = getattr(session, "store", None)
+    if store is None:
+        store = GraphStore(session.edges)
+        session.store = store
+    else:
+        store.ensure_device()
     _rebind_session_buffers(session, store)
     # host mirror turns lazy: materialized from the store on access, and
     # the edge COUNT tracks the store (build min-coalesces duplicates and

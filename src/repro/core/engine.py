@@ -45,17 +45,21 @@ strategy:
 from __future__ import annotations
 
 import math
+import os
+import signal as _signal
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import guard
+from repro.checkpoint import checkpoint as ckpt
 from repro.common import get_logger
 from repro.core.backend import RelaxBackend, dispatch_grow
+from repro.runtime.fault import Preempted, PreemptionGuard
 from repro.core.state import (
     EngineState,
     INF,
@@ -108,6 +112,18 @@ class EngineMetrics:
     kernel_launches: int = 0     # fused pallas_call dispatches
     kernel_supersteps: int = 0   # supersteps executed inside fused kernels
     dma_stall_blocks: int = 0    # frontier-skipped edge blocks (DMA-only)
+    # sharded-comm accounting (0 on single-device backends). The halo /
+    # all-gather plans are STATIC, so bytes = plan bytes x measured
+    # supersteps — exact, and metered without any extra host sync.
+    halo_bytes: int = 0          # plane-row bytes the comm plan moved
+    fullplane_bytes: int = 0     # what a full-plane all-gather would move
+    # durability accounting: guard.fetch leaf materializations spent by
+    # stage-boundary checkpoint saves. Deliberately OUTSIDE host_syncs —
+    # checkpoint cadence is a durability knob, not an algorithmic round,
+    # and the paper's sync budget must not drift with it. The extended
+    # sync-equality contract is
+    #   measured == host_syncs + finalize_syncs + checkpoint_syncs.
+    checkpoint_syncs: int = 0
 
 
 @dataclass
@@ -141,6 +157,147 @@ def _empty_decomposition(n: int, metrics: EngineMetrics) -> Decomposition:
         final_pathw=np.zeros(n, np.int32), radius=0, delta_end=1,
         n_clusters=n, n_stages=0, growing_steps=0, metrics=metrics,
     )
+
+
+def _comm_accounting(metrics: EngineMetrics, backend: RelaxBackend,
+                     total_steps: int) -> None:
+    """Exact wire-byte accounting for sharded backends: the collective
+    plan (halo all_to_all tables or the full-plane all-gather) is fixed
+    when the backend is built, so bytes = plan bytes x measured
+    supersteps with zero additional host syncs. Single-device backends
+    expose no per-step plan and stay at 0."""
+    per = int(getattr(backend, "halo_bytes_per_step", 0) or 0)
+    base = int(getattr(backend, "fullplane_bytes_per_step", 0) or 0)
+    metrics.halo_bytes = per * total_steps
+    metrics.fullplane_bytes = base * total_steps
+
+
+@dataclass
+class StageCheckpointer:
+    """Stage-boundary checkpoint/restore hook for the staged engine.
+
+    At every stage boundary — right after the stage's single stats fetch
+    — ``run_cluster`` hands this hook the full decomposition state: the
+    ``EngineState`` planes, the RNG key, the host scalars (stage counter,
+    Δ, uncovered count, superstep totals) and, when a ``GraphStore`` is
+    attached, its host-mirrored slabs/buffers. Every ``every``-th stage
+    the tree goes through ``checkpoint.save`` (atomic rename, so a
+    preempted writer never corrupts the latest complete step).
+
+    Under an entered :class:`PreemptionGuard` whose signal has fired, the
+    save is unconditional and :class:`Preempted` is raised AFTER the
+    checkpoint is durable. Resume is byte-identical by construction:
+    per-stage center draws use ``fold_in(key, stage)``, the state is all
+    int32/bool (no fp accumulation drift), and the saved key + stage
+    counter regenerate exactly the remaining draws — so a killed
+    decomposition restores and finishes with the same bracket the
+    uninterrupted run produces.
+
+    ``preempt_after_stage`` (tests / the stream bench) delivers a REAL
+    ``SIGTERM`` to this process at that stage boundary, exercising the
+    actual signal path rather than faking the flag; it therefore
+    requires an attached, entered guard.
+
+    One-shot mode has no stage boundary (single fixpoint, single sync)
+    and ignores the checkpointer.
+    """
+
+    ckpt_dir: str
+    guard: Optional[PreemptionGuard] = None
+    store: Optional[Any] = None      # graph.storage.GraphStore (or EdgeStore)
+    every: int = 1
+    keep: int = 3
+    resume: bool = False
+    preempt_after_stage: int = 0     # 0 = never; k = SIGTERM at boundary k
+    saves: int = 0
+    restores: int = 0
+    last_path: Optional[str] = None
+    _fired: bool = field(default=False, repr=False)
+
+    def _tree(self, state, key) -> Dict[str, Any]:
+        tree: Dict[str, Any] = {"planes": state, "key": key}
+        if self.store is not None:
+            tree["store"] = self.store.state_dict()
+        return tree
+
+    def save(self, state, key, scalars: Dict[str, Any],
+             metrics: Optional[EngineMetrics] = None) -> str:
+        extra: Dict[str, Any] = {"engine": {k: int(v) if isinstance(v, (int, np.integer)) else v
+                                            for k, v in scalars.items()}}
+        if self.store is not None:
+            extra["store"] = self.store.extra_state()
+        # nested meter: the save's own guard.fetch calls (one per device
+        # leaf) are measured here and booked as checkpoint_syncs, keeping
+        # the algorithmic sync budget clean
+        with guard.measured_transfers(level="allow") as m:
+            path = ckpt.save(self.ckpt_dir, int(scalars["stage"]),
+                             self._tree(state, key), extra=extra,
+                             keep=self.keep)
+        if metrics is not None:
+            metrics.checkpoint_syncs += m.transfers
+        self.saves += 1
+        self.last_path = path
+        return path
+
+    def at_stage_boundary(self, state, key, scalars: Dict[str, Any],
+                          metrics: Optional[EngineMetrics] = None) -> None:
+        """Called by ``run_cluster`` after each stage's stats fetch.
+        Saves on cadence; on observed preemption saves unconditionally
+        and raises :class:`Preempted`."""
+        stage = int(scalars["stage"])
+        if (self.preempt_after_stage and stage >= self.preempt_after_stage
+                and not self._fired):
+            if self.guard is None:
+                raise RuntimeError(
+                    "preempt_after_stage requires an attached (and entered) "
+                    "PreemptionGuard — a raw SIGTERM would kill the process")
+            self._fired = True
+            # a REAL signal: the guard's handler runs synchronously on
+            # delivery, flipping should_stop before the check below
+            os.kill(os.getpid(), _signal.SIGTERM)
+        preempted = self.guard is not None and self.guard.should_stop
+        if preempted or (self.every and stage % self.every == 0):
+            self.save(state, key, scalars, metrics)
+        if preempted:
+            raise Preempted(stage, self.last_path,
+                            getattr(self.guard, "received", None))
+
+    def try_restore(self, like_state, like_key):
+        """Restore the latest checkpoint, or None when the directory is
+        empty (fresh start). Plane leaves are re-placed against
+        ``like_state``'s shardings leaf-by-leaf, so a checkpoint written
+        under one device layout restores onto whatever the current
+        backend built (the elastic path). The attached store, when
+        present, is restored in place."""
+        if ckpt.latest_step(self.ckpt_dir) is None:
+            return None
+        tree, extra = ckpt.restore(self.ckpt_dir,
+                                   self._tree(like_state, like_key))
+        state = jax.tree_util.tree_map(
+            lambda cur, new: jax.device_put(np.asarray(new), cur.sharding),
+            like_state, tree["planes"])
+        # uncommitted on purpose (plain asarray, no device_put): a fresh
+        # PRNGKey is uncommitted too, so jit may co-locate it with however
+        # the planes are sharded; committing it to one device would break
+        # multi-device resume
+        key = jnp.asarray(np.asarray(tree["key"]), dtype=like_key.dtype)
+        if self.store is not None and "store" in tree:
+            self.store.load_state(tree["store"], extra.get("store", {}))
+        self.restores += 1
+        return state, key, extra.get("engine", {})
+
+    def complete(self) -> None:
+        """The decomposition finished: clear step directories so a later
+        query on the same directory never resumes from a stale bracket,
+        and consume the resume flag."""
+        self.resume = False
+        if os.path.isdir(self.ckpt_dir):
+            import re
+            import shutil
+            for d in os.listdir(self.ckpt_dir):
+                if re.fullmatch(r"step_\d+", d):
+                    shutil.rmtree(os.path.join(self.ckpt_dir, d),
+                                  ignore_errors=True)
 
 
 def _sample_centers(key, p, state: EngineState, n: int, max_resamples: int):
@@ -359,6 +516,7 @@ def run_cluster(
     threshold_const: float = 8.0,
     max_resamples: int = MAX_RESAMPLES,
     max_delta: Optional[int] = None,
+    checkpointer: Optional[StageCheckpointer] = None,
 ) -> Decomposition:
     """Paper Algorithm 1 on the device-resident engine.
 
@@ -366,6 +524,12 @@ def run_cluster(
     device arrays (a quotient cascade level) — ``max_delta`` (the Δ-doubling
     ceiling, normally derived from the host weight sum) must then be given
     explicitly; the node count comes from ``backend.n_nodes``.
+
+    ``checkpointer`` (a :class:`StageCheckpointer`) makes the decomposition
+    preemption-safe: state is saved at stage boundaries, an observed
+    SIGTERM/SIGINT raises :class:`~repro.runtime.fault.Preempted` after a
+    durable save, and ``checkpointer.resume=True`` restores the latest
+    checkpoint and finishes byte-identically.
     """
     if edges is None and max_delta is None:
         raise ValueError("run_cluster(edges=None) needs an explicit max_delta")
@@ -393,6 +557,28 @@ def run_cluster(
     n_stages = 0
     stage = 0
 
+    if checkpointer is not None and checkpointer.resume:
+        restored = checkpointer.try_restore(state, key)
+        checkpointer.resume = False  # consumed either way
+        if restored is not None:
+            state, key, sc = restored
+            for want, got in (("seed", seed), ("n", n), ("tau", tau),
+                              ("variant", variant)):
+                if want in sc and sc[want] != got:
+                    raise ValueError(
+                        f"checkpoint {want}={sc[want]!r} does not match this "
+                        f"run's {want}={got!r}; refusing a divergent resume")
+            stage = int(sc["stage"])
+            delta_host = int(sc["delta"])
+            u_host = int(sc["uncovered"])
+            total_steps = int(sc["total_steps"])
+            n_stages = int(sc["n_stages"])
+            delta = jnp.int32(delta_host)
+            metrics.stages = stage
+            log.info("resumed decomposition at stage %d (uncovered=%d, "
+                     "delta=%d) from %s", stage, u_host, delta_host,
+                     checkpointer.ckpt_dir)
+
     while stage < max_stages and u_host >= threshold:
         state, delta, stats = _cluster_stage(
             state, jax.random.fold_in(key, stage), delta,
@@ -419,9 +605,19 @@ def run_cluster(
             "stage %d: centers+%d steps=%d grows=%d resamples=%d uncovered=%d",
             stage, n_new, steps, grows, resamples, u_host,
         )
+        if checkpointer is not None:
+            checkpointer.at_stage_boundary(
+                state, key,
+                {"stage": stage, "delta": delta_host, "uncovered": u_host,
+                 "total_steps": total_steps, "n_stages": n_stages,
+                 "seed": seed, "n": n, "tau": tau, "variant": variant},
+                metrics)
 
+    if checkpointer is not None:
+        checkpointer.complete()
     metrics.growing_steps = total_steps
     metrics.state_transfers = backend.transfers - transfers0
+    _comm_accounting(metrics, backend, total_steps)
     return _finalize(state, n, delta_host, n_stages, total_steps, metrics)
 
 
@@ -472,6 +668,7 @@ def run_cluster2(
 
     metrics.growing_steps = total_steps
     metrics.state_transfers = backend.transfers - transfers0
+    _comm_accounting(metrics, backend, total_steps)
     return _finalize(state, n, int(delta), stage_count, total_steps, metrics)
 
 
@@ -619,6 +816,7 @@ def run_oneshot(
     metrics.kernel_supersteps = ksteps
     metrics.dma_stall_blocks = dead
     metrics.state_transfers = backend.transfers - transfers0
+    _comm_accounting(metrics, backend, steps)
     log.info("oneshot: centers=%d steps=%d uncovered=%d deterministic=%s",
              n_new, steps, u_host, deterministic)
     return _finalize(state, n, int(max_delta), 1, steps, metrics)

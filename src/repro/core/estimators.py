@@ -65,6 +65,15 @@ class PipelineMetrics:
 
     decompose_syncs: int = 0   # one per engine stage (stop-decision scalars)
     finalize_syncs: int = 0    # packed final-plane fetch (1 per decomposition)
+    checkpoint_syncs: int = 0  # device leaves materialized for durability
+                               # (stage-boundary checkpoints). Deliberately
+                               # NOT in total_host_syncs: durability cost is
+                               # a knob (checkpoint_every), not part of the
+                               # algorithmic round budget the bench asserts.
+    halo_bytes: int = 0        # plane-row bytes the sharded comm plan moved
+    fullplane_bytes: int = 0   # what a full-plane all-gather would have moved
+                               # (both 0 on single-device backends; bytes,
+                               # not syncs — never in total_host_syncs)
     quotient_syncs: int = 0    # (k, m, max_w, w_sum) counter fetch, 1 / level
     solve_syncs: int = 0       # packed (diameter, connected, steps, ecc) fetch
     solve_supersteps: int = 0  # device BF supersteps inside the solve
@@ -304,7 +313,8 @@ def _resolve_query_cfg(session: GraphSession, est) -> Tuple[object, int]:
 
 
 def _run_decomposition(edges, backend, cfg, tau: int,
-                       pm: PipelineMetrics) -> Decomposition:
+                       pm: PipelineMetrics,
+                       checkpointer=None) -> Decomposition:
     """Level-0 decomposition on the session's resident backend."""
     if cfg.use_cluster2:
         dec: Decomposition = cluster2(
@@ -319,10 +329,14 @@ def _run_decomposition(edges, backend, cfg, tau: int,
             max_steps_per_phase=cfg.max_steps_per_phase,
             relax_fn=backend,
             mode=cfg.mode, deterministic=cfg.deterministic,
+            checkpointer=checkpointer,
         )
     if dec.metrics is not None:
         pm.decompose_syncs = dec.metrics.host_syncs
         pm.finalize_syncs = dec.metrics.finalize_syncs
+        pm.checkpoint_syncs = dec.metrics.checkpoint_syncs
+        pm.halo_bytes = dec.metrics.halo_bytes
+        pm.fullplane_bytes = dec.metrics.fullplane_bytes
     return dec
 
 
@@ -381,7 +395,9 @@ class ClusterQuotientEstimator:
         pm = PipelineMetrics()
         ecc = None
         with session.track_query(), Timer() as t:
-            dec = _run_decomposition(edges, backend, cfg, tau, pm)
+            dec = _run_decomposition(
+                edges, backend, cfg, tau, pm,
+                checkpointer=getattr(session, "checkpointer", None))
             if self.solver == "scipy":
                 q = build_quotient_numpy(edges, dec)
                 phi_q, connected = quotient_diameter(q)
@@ -445,7 +461,9 @@ class CascadeEstimator:
         edges, backend = session.edges, session.backend
         pm = PipelineMetrics()
         with session.track_query(), Timer() as t:
-            dec = _run_decomposition(edges, backend, cfg, tau, pm)
+            dec = _run_decomposition(
+                edges, backend, cfg, tau, pm,
+                checkpointer=getattr(session, "checkpointer", None))
             phi_q, ecc, connected, extra = _cascade_quotient_solve(
                 edges, dec, backend, pm, cfg, tau_solve, self.levels,
                 level_mode=level_mode)

@@ -35,6 +35,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
+import os
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -45,6 +46,7 @@ from repro.config.base import GraphEngineConfig
 from repro.core.backend import RelaxBackend, make_backend
 from repro.core.cluster import _initial_delta
 from repro.core.engine import resolve_engine_mode
+from repro.graph.storage import EdgeStore, GraphStore
 from repro.graph.structures import EdgeList
 
 log = get_logger("repro.session")
@@ -96,7 +98,7 @@ class GraphSession:
 
     def __init__(
         self,
-        edges: EdgeList,
+        edges: Optional[EdgeList],
         cfg: Optional[GraphEngineConfig] = None,
         *,
         tau: Optional[int] = None,
@@ -106,6 +108,10 @@ class GraphSession:
         metrics: Optional[SessionMetrics] = None,
         delta_stats: Optional[Dict[str, int]] = None,
         autotune: Optional[str] = None,
+        store: Optional[EdgeStore] = None,
+        checkpoint_dir: Optional[str] = None,
+        resume: bool = False,
+        guard=None,
     ):
         if tau is not None and tau < 1:
             raise ValueError(f"tau must be >= 1, got {tau}")
@@ -114,6 +120,16 @@ class GraphSession:
         if rebuild_fraction is not None and not 0.0 <= rebuild_fraction <= 1.0:
             raise ValueError(
                 f"rebuild_fraction must be in [0, 1], got {rebuild_fraction}")
+        if edges is None:
+            if store is None:
+                raise ValueError("GraphSession needs edges or a store")
+            edges = store.edge_list()
+        # out-of-core storage layer: when present, it (not the raw edge
+        # arrays) is the source of truth — the backend binds its buffers,
+        # spill()/unspill() move residency, and the stage checkpointer
+        # persists its host mirrors alongside the engine planes
+        self.store: Optional[EdgeStore] = store
+        self._spilled = False
         self._edges: Optional[EdgeList] = edges
         self._edges_fn = None  # dynamic mode: lazy host-mirror thunk
         self._n_nodes = edges.n_nodes
@@ -153,13 +169,7 @@ class GraphSession:
             self.cfg = dataclasses.replace(self.cfg, mode=mode_resolved)
 
         if backend is None:
-            t = self.tuning
-            backend = make_backend(
-                edges, self.cfg.backend, comm=self.cfg.comm,
-                impl=self.cfg.relax_impl,
-                node_tile=self.cfg.node_tile or (t.node_tile if t else 0),
-                edge_block=self.cfg.edge_block or (t.edge_block if t else 0),
-                fuse=self.cfg.fuse_supersteps or (t.fuse if t else 0))
+            backend = self._build_backend()
         # a prebuilt backend counts too: its construction and edge upload
         # are this session's open cost (they happened, just outside) — the
         # warm-query contract must account for them either way
@@ -189,9 +199,34 @@ class GraphSession:
         self._flat_edges: Optional[Tuple] = None
         self._dynamic = None  # core.dynamic.DynamicState after apply_updates
         self._closed = False
+        # preemption-safe decomposition: a checkpoint_dir arms a
+        # StageCheckpointer that the cluster-quotient estimators hand to
+        # run_cluster; resume=True picks up the latest stage checkpoint
+        # (engine planes + RNG key + store mirrors) for a byte-identical
+        # finish after a kill
+        self.checkpoint_dir = checkpoint_dir
+        self.guard = guard
+        self.checkpointer = None
+        if checkpoint_dir is not None:
+            from repro.core.engine import StageCheckpointer
+
+            self.checkpointer = StageCheckpointer(
+                checkpoint_dir, guard=guard, store=store, resume=resume)
         log.debug("opened session: %d nodes, %d edges, tau=%d, backend=%s",
                   edges.n_nodes, edges.n_edges, self.tau,
                   getattr(self.backend, "kind", "custom"))
+
+    def _build_backend(self) -> RelaxBackend:
+        """Construct the RelaxBackend over the store (when attached) or the
+        raw edges — shared by the open path and ``unspill``."""
+        t = self.tuning
+        src = self.store if self.store is not None else self.edges
+        return make_backend(
+            src, self.cfg.backend, comm=self.cfg.comm,
+            impl=self.cfg.relax_impl,
+            node_tile=self.cfg.node_tile or (t.node_tile if t else 0),
+            edge_block=self.cfg.edge_block or (t.edge_block if t else 0),
+            fuse=self.cfg.fuse_supersteps or (t.fuse if t else 0))
 
     # -- resident buffers ---------------------------------------------------
 
@@ -317,17 +352,70 @@ class GraphSession:
         if m.backend_builds == b0 and m.edge_uploads == u0:
             m.warm_queries += 1
 
+    # -- spill seam (ROADMAP serving item) ----------------------------------
+
+    @property
+    def spilled(self) -> bool:
+        return self._spilled
+
+    def spill(self):
+        """Drop this session's DEVICE buffers while keeping the host
+        mirrors: the store's paired host arrays stay the source of truth,
+        so a spilled session costs no accelerator memory but reopens
+        transparently — the next query auto-unspills (rebuild + re-upload,
+        counted in ``SessionMetrics`` so it is not misread as warm).
+        Requires a store-backed session (``open_session(store=...)``)."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        if self.store is None:
+            raise RuntimeError(
+                "spill() requires a store-backed session "
+                "(open_session(..., store=EdgeStore/GraphStore))")
+        if self._dynamic is not None:
+            raise RuntimeError(
+                "cannot spill a session in dynamic mode: the maintained "
+                "decomposition planes are device-resident state")
+        if self._spilled:
+            return
+        # materialize the host edge mirror first — edge_list() reads the
+        # host buffers, but the cached EdgeList must exist before the
+        # device arrays go away
+        self._edges = self.store.edge_list()
+        self.store.drop_device()
+        self.backend = None
+        self._flat_edges = None
+        self._spilled = True
+        log.debug("session spilled (%d nodes, %d edges host-resident)",
+                  self._n_nodes, self._n_edges)
+
+    def unspill(self):
+        """Restore device residency after :meth:`spill`: re-upload the
+        store buffers and rebuild the backend. No-op when resident."""
+        if not self._spilled:
+            return
+        self._spilled = False
+        self.store.ensure_device()
+        self.backend = self._build_backend()
+        self.metrics.backend_builds += 1
+        self.metrics.edge_uploads += 1
+
     # -- lifecycle ----------------------------------------------------------
 
     def _check_open(self):
         if self._closed:
             raise RuntimeError("session is closed")
+        if self._spilled:
+            self.unspill()
 
     def close(self):
         """Release the graph buffers: the device-side backend, flat views
         and dynamic-update state AND the host edge arrays (only the scalar
         shape/config survives, so a closed session costs nothing to keep
         around). Idempotent; any later use raises via ``_check_open``."""
+        if self.store is not None:
+            self.store.drop_device()
+        self.store = None
+        self.checkpointer = None
         self.backend = None
         self._flat_edges = None
         self._dynamic = None
@@ -343,7 +431,7 @@ class GraphSession:
 
 
 def open_session(
-    edges: EdgeList,
+    edges: Optional[EdgeList] = None,
     cfg: Optional[GraphEngineConfig] = None,
     *,
     tau: Optional[int] = None,
@@ -352,6 +440,10 @@ def open_session(
     backend: Optional[RelaxBackend] = None,
     metrics: Optional[SessionMetrics] = None,
     autotune: Optional[str] = None,
+    store: Optional[EdgeStore] = None,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
+    guard=None,
 ) -> GraphSession:
     """Open a graph once for many queries. ``backend`` passes a prebuilt
     ``RelaxBackend`` through (e.g. ``DistributedEngine.make_relax_fn()``);
@@ -361,10 +453,20 @@ def open_session(
     ``autotune`` ("off" | "auto" | "record") overrides ``cfg.autotune``:
     under auto/record the session derives tau/tau_solve/delta_init/kernel
     tiling from one device statistics pass (``core/autotune.py``), keeping
-    any knob you pass explicitly."""
+    any knob you pass explicitly.
+
+    ``store`` binds a :class:`~repro.graph.storage.EdgeStore` /
+    ``GraphStore`` as the session's storage layer (``edges`` may then be
+    omitted) — enabling ``spill()``/``unspill()`` and letting stage
+    checkpoints capture the edge buffers. ``checkpoint_dir`` (+ optional
+    ``guard``, a ``runtime.fault.PreemptionGuard``) makes staged
+    decompositions preemption-safe; ``resume=True`` continues from the
+    latest stage checkpoint for a byte-identical finish."""
     return GraphSession(edges, cfg, tau=tau, tau_solve=tau_solve,
                         rebuild_fraction=rebuild_fraction,
-                        backend=backend, metrics=metrics, autotune=autotune)
+                        backend=backend, metrics=metrics, autotune=autotune,
+                        store=store, checkpoint_dir=checkpoint_dir,
+                        resume=resume, guard=guard)
 
 
 # ---------------------------------------------------------------------------
@@ -414,15 +516,32 @@ class SessionPool:
     def __init__(self, cfg: Optional[GraphEngineConfig] = None,
                  edge_bucket: int = EDGE_BUCKET,
                  tau_solve: Optional[int] = None,
-                 rebuild_fraction: Optional[float] = None):
+                 rebuild_fraction: Optional[float] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 shards: int = 0,
+                 resume: bool = False,
+                 guard=None):
         if tau_solve is not None and tau_solve < 2:
             raise ValueError(f"tau_solve must be >= 2, got {tau_solve}")
+        if shards < 0:
+            raise ValueError(f"shards must be >= 0, got {shards}")
         self.cfg = cfg or GraphEngineConfig()
         self.edge_bucket = edge_bucket
         self.tau_solve = tau_solve
         self.rebuild_fraction = rebuild_fraction
+        # out-of-core / fault-tolerance knobs, threaded into every opened
+        # session: ``shards > 1`` backs sessions with a partition-aware
+        # GraphStore (capacity pinned to the group's edge bucket via
+        # min_capacity, so same-bucket stores still share jit shapes);
+        # ``checkpoint_dir`` gives each session its own subdirectory
+        # (g0, g1, ...) so pooled checkpoints never collide.
+        self.checkpoint_dir = checkpoint_dir
+        self.shards = int(shards)
+        self.resume = resume
+        self.guard = guard
         self.metrics = SessionMetrics()
         self.sessions: List[GraphSession] = []
+        self._opened = 0
         self._closed = False
 
     def _check_open(self):
@@ -442,10 +561,28 @@ class SessionPool:
             delta0 = _initial_delta(edges, self.cfg.delta_init)
         gcfg = dataclasses.replace(self.cfg, delta_init=str(delta0))
         e_pad = e_pad or next_multiple(max(edges.n_edges, 1), self.edge_bucket)
+        ckpt_dir = None
+        if self.checkpoint_dir is not None:
+            ckpt_dir = os.path.join(self.checkpoint_dir, f"g{self._opened}")
+        self._opened += 1
+        if self.shards > 1:
+            # store-backed session: the store's capacity padding (inert
+            # self-loop free slots, floored at e_pad) plays the role of
+            # _pad_edges, and its slabs/halo drive the sharded layout
+            store = GraphStore(edges, n_shards=self.shards,
+                               min_capacity=e_pad, bucket=self.edge_bucket)
+            return GraphSession(None, gcfg, tau=tau,
+                                tau_solve=self.tau_solve,
+                                rebuild_fraction=self.rebuild_fraction,
+                                metrics=self.metrics, delta_stats=stats,
+                                store=store, checkpoint_dir=ckpt_dir,
+                                resume=self.resume, guard=self.guard)
         return GraphSession(_pad_edges(edges, e_pad), gcfg, tau=tau,
                             tau_solve=self.tau_solve,
                             rebuild_fraction=self.rebuild_fraction,
-                            metrics=self.metrics, delta_stats=stats)
+                            metrics=self.metrics, delta_stats=stats,
+                            checkpoint_dir=ckpt_dir,
+                            resume=self.resume, guard=self.guard)
 
     def open(self, edges: EdgeList, *, tau: Optional[int] = None,
              e_pad: Optional[int] = None) -> GraphSession:

@@ -1,12 +1,12 @@
 from repro.graph.structures import (
     EdgeList,
-    EdgeStore,
     DeviceGraph,
     INF_I32,
     MAX_WEIGHT,
     rescale_weights,
     weight_scale_for,
 )
+from repro.graph.storage import EdgeStore, GraphStore
 from repro.graph.generators import (
     grid_mesh,
     random_geometric,
@@ -22,6 +22,7 @@ from repro.graph.segment_ops import segment_min_pair, relax_candidates
 __all__ = [
     "EdgeList",
     "EdgeStore",
+    "GraphStore",
     "DeviceGraph",
     "INF_I32",
     "MAX_WEIGHT",

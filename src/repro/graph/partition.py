@@ -24,32 +24,75 @@ def range_partition(n_nodes: int, n_devices: int) -> np.ndarray:
     return np.arange(n_nodes, dtype=np.int32)  # identity permutation
 
 
-def cluster_partition(centers: np.ndarray, n_devices: int) -> np.ndarray:
-    """Locality-preserving packing of clusters onto devices.
+def _contiguous_fill(counts: np.ndarray, n_devices: int) -> np.ndarray:
+    """Balanced CONTIGUOUS segmentation of the cluster-size sequence:
+    clusters (in center-id order) accumulate onto device d until its load
+    reaches the d-th balanced threshold ``total * (d+1) / P``. Max load is
+    bounded by ``total/P + max_cluster - 1`` — unlike the old count-based
+    fill, which dumped the whole size skew onto the last device."""
+    total = int(counts.sum())
+    thresholds = (total * (np.arange(1, n_devices + 1))) // n_devices
+    cum = np.cumsum(counts)
+    # device of cluster i = number of thresholds strictly below cum[i-1]
+    # (i.e. the segment whose threshold cum[i] first reaches)
+    return np.searchsorted(thresholds, cum, side="left").clip(
+        max=n_devices - 1).astype(np.int64)
+
+
+def _lpt_fill(counts: np.ndarray, n_devices: int) -> np.ndarray:
+    """Greedy largest-first (LPT) bin packing: clusters sorted by size
+    descending, each placed on the currently least-loaded device. Max load
+    within 4/3 of optimal; ties (equal sizes, equal loads) break
+    deterministically by center id / device id."""
+    order = np.argsort(-counts, kind="stable")  # largest first, ties by id
+    loads = np.zeros(n_devices, dtype=np.int64)
+    dev = np.zeros(len(counts), dtype=np.int64)
+    for ci in order:
+        d = int(np.argmin(loads))  # least-loaded; lowest id on ties
+        dev[ci] = d
+        loads[d] += int(counts[ci])
+    return dev
+
+
+def _max_load(counts: np.ndarray, dev: np.ndarray, n_devices: int) -> int:
+    return int(np.bincount(dev, weights=counts,
+                           minlength=n_devices).max()) if len(counts) else 0
+
+
+def cluster_partition(centers: np.ndarray, n_devices: int,
+                      imbalance_tolerance: float = 1.5) -> np.ndarray:
+    """Locality-preserving, load-balanced packing of clusters onto devices.
 
     ``centers[u]`` = cluster center id of node u (output of the engine).
-    Clusters are laid out in center-id order (center ids correlate with
-    graph locality for the generators and for BFS/Hilbert-ordered real
-    graphs) and devices are filled contiguously to ~n/n_devices, so nodes of
-    one cluster never split across devices and NEIGHBORING clusters tend to
-    share a device — both cut the halo. Returns perm (new -> old) with
-    contiguous per-device ranges.
+    Nodes of one cluster never split across devices. Two deterministic
+    packers, picked by measured load:
+
+      1. balanced contiguous fill (default): clusters stay in center-id
+         order — center ids correlate with graph locality for the
+         generators and for BFS/Hilbert-ordered real graphs, so
+         neighboring clusters share a device and the edge cut stays low —
+         with device boundaries placed at balanced LOAD thresholds
+         (max load <= total/P + largest cluster).
+      2. greedy largest-first bin packing (LPT): engaged only when the
+         size distribution is so skewed that contiguity costs real
+         balance (contiguous max load > ``imbalance_tolerance`` x the LPT
+         max load); sacrifices adjacency for the 4/3-of-optimal bound.
+
+    Both choices and all tie-breaks are deterministic functions of
+    ``centers``, so the permutation is replayable. Returns perm
+    (new -> old) with contiguous per-device node ranges.
     """
     n = len(centers)
-    cap = ceil_div(n, n_devices)
-    uniq, counts = np.unique(centers, return_counts=True)  # sorted by center id
-    dev_of_cluster = {}
-    load = 0
-    dev = 0
-    for c, cnt in zip(uniq, counts):
-        if load + cnt > cap and dev < n_devices - 1 and load > 0:
-            dev += 1
-            load = 0
-        dev_of_cluster[int(c)] = dev
-        load += int(cnt)
+    centers = np.asarray(centers)
+    uniq, inv_idx, counts = np.unique(centers, return_inverse=True,
+                                      return_counts=True)
+    dev_of_cluster = _contiguous_fill(counts, n_devices)
+    lpt = _lpt_fill(counts, n_devices)
+    if (_max_load(counts, dev_of_cluster, n_devices)
+            > imbalance_tolerance * max(_max_load(counts, lpt, n_devices), 1)):
+        dev_of_cluster = lpt
 
-    dev_of_node = np.fromiter((dev_of_cluster[int(c)] for c in centers),
-                              dtype=np.int64, count=n)
+    dev_of_node = dev_of_cluster[inv_idx]
     # stable sort by (device, cluster, id) -> contiguous device ranges with
     # whole clusters kept together
     perm = np.lexsort((np.arange(n), centers, dev_of_node)).astype(np.int32)

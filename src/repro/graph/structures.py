@@ -186,147 +186,27 @@ class DeviceGraph:
 
 
 # ---------------------------------------------------------------------------
-# mutable resident edge buffers (the dynamic-graph subsystem's storage layer)
+# mutable resident edge buffers — MOVED to repro.graph.storage
 # ---------------------------------------------------------------------------
 
 # capacity is kept at a multiple of this so the engine's shape-keyed jit
-# caches see one program per capacity bucket, not per edge count
+# caches see one program per capacity bucket, not per edge count.
+# (Defined here, imported by storage.py: structures must stay importable
+# without pulling the storage layer in.)
 EDGE_STORE_BUCKET = 256
 
 
-class EdgeStore:
-    """Paired host/device edge buffers with capacity headroom, built for
-    in-place mutation: each directed ``(u, v)`` key owns at most one slot,
-    unused slots are inert self-loops (``0 -> 0, w = 1`` — the same padding
-    convention as pooled sessions, invisible to relaxation, SSSP and the
-    quotient pass), and freed slots are recycled before the arrays grow.
+def __getattr__(name: str):
+    # PEP 562 back-compat: ``EdgeStore`` lives in repro.graph.storage now
+    # (absorbed into the partition-aware GraphStore layer), but the old
+    # ``from repro.graph.structures import EdgeStore`` keeps working.
+    # Lazy so structures never imports storage at module load (storage
+    # imports structures; eager re-export would be a cycle).
+    if name == "EdgeStore":
+        from repro.graph.storage import EdgeStore
 
-    Mutations stage on the host (``set_edge`` / ``delete_edge``) and land on
-    the device in ONE scatter round per plane per ``flush()`` — no full
-    re-upload unless the capacity actually grows (``uploads`` counts those;
-    growth doubles, so re-uploads amortize to O(log E) over any update
-    stream). Duplicate input edges are min-coalesced at build time
-    (``EdgeList.coalesce`` semantics) so a key's slot always carries its
-    effective minimum weight — the contract incremental insertion relies on.
-    """
-
-    def __init__(self, edges: EdgeList, *, headroom: float = 1.5,
-                 bucket: int = EDGE_STORE_BUCKET):
-        if headroom < 1.0:
-            raise ValueError(f"headroom must be >= 1.0, got {headroom}")
-        self.n_nodes = int(edges.n_nodes)
-        self.bucket = int(bucket)
-        e = edges.n_edges
-        cap = next_multiple(max(int(e * headroom), e, 1), self.bucket)
-        self.h_src = np.zeros(cap, np.int32)
-        self.h_dst = np.zeros(cap, np.int32)
-        self.h_weight = np.ones(cap, np.int32)
-        self.valid = np.zeros(cap, bool)
-        self.slot_of: Dict[Tuple[int, int], int] = {}
-        # min-coalesce duplicates and drop self-loops through THE
-        # property-tested EdgeList helpers (one copy of the contract);
-        # losers become free slots
-        clean = edges.remove_self_loops().coalesce()
-        k = clean.n_edges
-        if k:
-            self.h_src[:k] = clean.src
-            self.h_dst[:k] = clean.dst
-            self.h_weight[:k] = clean.weight
-            self.valid[:k] = True
-            self.slot_of = {
-                (int(u), int(v)): s
-                for s, (u, v) in enumerate(zip(clean.src, clean.dst))}
-        self.free: List[int] = list(range(int(self.valid.sum()), cap))[::-1]
-        self._pending: Dict[int, Tuple[int, int, int]] = {}
-        self.src = jnp.asarray(self.h_src)
-        self.dst = jnp.asarray(self.h_dst)
-        self.weight = jnp.asarray(self.h_weight)
-        self.uploads = 1   # full-array device placements (build + growth)
-        self.scatters = 0  # in-place scatter rounds (one per flushed batch)
-
-    # -- introspection ------------------------------------------------------
-
-    @property
-    def capacity(self) -> int:
-        return len(self.h_src)
-
-    @property
-    def n_edges(self) -> int:
-        return int(self.valid.sum())
-
-    def lookup(self, u: int, v: int) -> Optional[int]:
-        """Current weight of directed edge (u, v), or None if absent."""
-        s = self.slot_of.get((u, v))
-        return int(self.h_weight[s]) if s is not None else None
-
-    def edge_list(self) -> EdgeList:
-        """Host materialization of the REAL (valid) edges."""
-        m = self.valid
-        return EdgeList(self.n_nodes, self.h_src[m].copy(),
-                        self.h_dst[m].copy(), self.h_weight[m].copy())
-
-    # -- staged mutation ----------------------------------------------------
-
-    def _check_endpoint(self, u: int, v: int) -> None:
-        n = self.n_nodes
-        if not (0 <= u < n and 0 <= v < n):
-            raise ValueError(f"edge ({u}, {v}) out of range for {n} nodes")
-
-    def set_edge(self, u: int, v: int, w: int) -> None:
-        """Stage insert-or-reweight of directed edge (u, v) to weight w."""
-        self._check_endpoint(u, v)
-        if not (1 <= w <= int(MAX_WEIGHT)):
-            raise ValueError(f"edge weights must be in [1, 2^30), got {w}")
-        s = self.slot_of.get((u, v))
-        if s is None:
-            if not self.free:
-                self._grow(self.capacity + 1)
-            s = self.free.pop()
-            self.slot_of[(u, v)] = s
-            self.valid[s] = True
-        self.h_src[s], self.h_dst[s], self.h_weight[s] = u, v, w
-        self._pending[s] = (u, v, w)
-
-    def delete_edge(self, u: int, v: int) -> None:
-        """Stage removal of directed edge (u, v): the slot reverts to an
-        inert self-loop and is recycled for future insertions."""
-        s = self.slot_of.pop((u, v), None)
-        if s is None:
-            raise ValueError(f"cannot delete missing edge ({u}, {v})")
-        self.valid[s] = False
-        self.free.append(s)
-        self.h_src[s], self.h_dst[s], self.h_weight[s] = 0, 0, 1
-        self._pending[s] = (0, 0, 1)
-
-    def _grow(self, min_capacity: int) -> None:
-        cap = next_multiple(max(min_capacity, 2 * self.capacity), self.bucket)
-        pad = cap - self.capacity
-        self.free = list(range(self.capacity, cap))[::-1] + self.free
-        self.h_src = np.concatenate([self.h_src, np.zeros(pad, np.int32)])
-        self.h_dst = np.concatenate([self.h_dst, np.zeros(pad, np.int32)])
-        self.h_weight = np.concatenate([self.h_weight, np.ones(pad, np.int32)])
-        self.valid = np.concatenate([self.valid, np.zeros(pad, bool)])
-
-    def flush(self) -> bool:
-        """Land staged mutations on device. Returns True when the device
-        arrays were REPLACED (capacity growth -> full upload, so callers
-        must rebind any views); False means one in-place scatter round."""
-        grew = len(self.h_src) != int(self.src.shape[0])
-        if grew:
-            self.src = jnp.asarray(self.h_src)
-            self.dst = jnp.asarray(self.h_dst)
-            self.weight = jnp.asarray(self.h_weight)
-            self.uploads += 1
-        elif self._pending:
-            slots = np.fromiter(self._pending, np.int32,
-                                count=len(self._pending))
-            svw = np.array(list(self._pending.values()), np.int32)
-            self.src = self.src.at[slots].set(svw[:, 0])
-            self.dst = self.dst.at[slots].set(svw[:, 1])
-            self.weight = self.weight.at[slots].set(svw[:, 2])
-            self.scatters += 1
-        self._pending.clear()
-        return grew
+        return EdgeStore
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def to_scipy_csr(edges: EdgeList):

@@ -17,6 +17,7 @@ estimators against the SAME session — no re-upload between methods.
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import jax
 
@@ -31,10 +32,8 @@ from repro.core import (
     cluster,
     open_session,
 )
-from repro.core.distributed import DistributedEngine
-from repro.graph import grid_mesh, random_geometric, social_like
-from repro.graph.partition import apply_partition, partition_for_backend
-from repro.launch.mesh import host_device_mesh
+from repro.graph import GraphStore, grid_mesh, random_geometric, social_like
+from repro.runtime.fault import EXIT_PREEMPTED, Preempted, PreemptionGuard
 
 log = get_logger("repro.diameter")
 
@@ -127,10 +126,28 @@ def main() -> int:
                     choices=["single", "sharded", "pallas"])
     ap.add_argument("--distributed", action="store_true",
                     help="alias for --backend sharded")
-    ap.add_argument("--comm", default="allgather", choices=["allgather", "halo"])
+    ap.add_argument("--comm", default="halo", choices=["halo", "allgather"],
+                    help="sharded collective: halo (static boundary-row "
+                         "exchange, default) or allgather (full-plane "
+                         "baseline); results are byte-identical")
     ap.add_argument("--partition", default="range", choices=["range", "cluster"],
                     help="sharded backend node relabeling (cluster = "
                          "locality-aware, from a pilot decomposition)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="GraphStore shard count (0 = device count for the "
+                         "sharded backend, unsharded otherwise); >1 also "
+                         "works with --backend single for storage-level "
+                         "slab/halo introspection")
+    ap.add_argument("--compress", action="store_true",
+                    help="hold resident GraphStore slabs compressed "
+                         "(lossless delta codec, decompressed on demand)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="arm stage-boundary checkpointing of the "
+                         "decomposition state (preemption-safe; see "
+                         "checkpoint/checkpoint.py)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest stage checkpoint in "
+                         "--checkpoint-dir (byte-identical finish)")
     ap.add_argument("--compare-sssp", action="store_true")
     ap.add_argument("--interval", action="store_true",
                     help="run the full estimator panel and report the "
@@ -150,25 +167,37 @@ def main() -> int:
                             mode=args.engine_mode,
                             deterministic=args.deterministic)
 
-    backend = None
-    if backend_kind == "sharded":
-        mesh = host_device_mesh()
-        if args.partition == "cluster":
-            # pilot decomposition -> locality-aware relabeling -> smaller halo
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+    shards = args.shards
+    if shards == 0 and backend_kind == "sharded":
+        shards = int(jax.device_count())
+    store = None
+    if shards > 1 or args.compress:
+        centers = None
+        if backend_kind == "sharded" and args.partition == "cluster":
+            # pilot decomposition -> locality-aware relabeling inside the
+            # store -> smaller halo for the sharded grow path
             pilot = cluster(g, max(16 if args.tau is None else args.tau, 4),
                             seed=args.seed)
-            n_dev = int(jax.device_count())
-            perm = partition_for_backend(g, "sharded", n_dev, pilot.final_c)
-            g, _ = apply_partition(g, perm)
-            log.info("cluster partition applied over %d devices", n_dev)
-        eng = DistributedEngine(g, mesh, comm=args.comm)
-        backend = eng.make_relax_fn()
-        log.info("sharded backend on %s devices, comm=%s",
-                 dict(mesh.shape), args.comm)
-    # single/pallas: the session builds the backend from cfg.backend
+            centers = pilot.final_c
+        store = GraphStore(g, n_shards=max(shards, 1), centers=centers,
+                           compress=args.compress)
+        log.info("GraphStore: %d shards, halo_k=%d, halo %d B/superstep vs "
+                 "full-plane %d B/superstep, resident %d B (raw %d B)",
+                 store.n_shards, store.halo_k(),
+                 store.halo_bytes_per_superstep(),
+                 store.fullplane_bytes_per_superstep(),
+                 store.resident_bytes(), store.raw_bytes())
+    # the session builds the backend from cfg.backend (make_backend hands a
+    # GraphStore's prebuilt slab/halo layout to the DistributedEngine)
 
-    sess = open_session(g, cfg, tau=args.tau, tau_solve=args.tau_solve,
-                        backend=backend, autotune=args.autotune)
+    guard = PreemptionGuard() if args.checkpoint_dir else None
+    sess = open_session(g if store is None else None, cfg,
+                        tau=args.tau, tau_solve=args.tau_solve,
+                        autotune=args.autotune, store=store,
+                        checkpoint_dir=args.checkpoint_dir,
+                        resume=args.resume, guard=guard)
     if sess.tuning is not None:
         t = sess.tuning
         log.info("autotuned: tau=%d tau_solve=%d levels=%d delta0=%d "
@@ -180,7 +209,14 @@ def main() -> int:
         estimator = None  # session default: tuned cascade depth
     else:
         estimator = ClusterQuotientEstimator()
-    est = sess.estimate(estimator)
+    try:
+        with (guard if guard is not None else contextlib.nullcontext()):
+            est = sess.estimate(estimator)
+    except Preempted as p:
+        log.warning("preempted at stage %d; checkpoint durable at %s — "
+                    "rerun with --resume to finish byte-identically",
+                    p.stage, p.path)
+        return EXIT_PREEMPTED
     log.info("Phi_approx = %d  (quotient %d + 2 x radius %d)  "
              "clusters=%d stages=%d growing_steps=%d connected=%s  %.2fs",
              est.phi_approx, est.phi_quotient, est.radius, est.n_clusters,

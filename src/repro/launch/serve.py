@@ -19,6 +19,7 @@ against a full re-decomposition.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -29,6 +30,7 @@ import numpy as np
 from repro.common import bench_engine_path, get_logger
 from repro.config.registry import get_arch
 from repro.models import transformer as tf_mod
+from repro.runtime.fault import EXIT_PREEMPTED, Preempted, PreemptionGuard
 
 log = get_logger("repro.serve")
 
@@ -143,13 +145,27 @@ def serve_graph_diameter(args) -> int:
                                  p_reweight=p_rw, p_delete=p_del, seed=s)
                   for s, g in enumerate(graphs)]
 
-    pool = SessionPool(cfg, tau_solve=args.tau_solve)
+    # preemption-safe serving: a checkpoint-dir arms per-session stage
+    # checkpointers (subdirs g0, g1, ...) under one process-level guard;
+    # a SIGTERM mid-decomposition checkpoints, exits EXIT_PREEMPTED (75),
+    # and a --resume rerun finishes the bracket byte-identically
+    pguard = PreemptionGuard() if args.checkpoint_dir else None
+    pool = SessionPool(cfg, tau_solve=args.tau_solve,
+                       checkpoint_dir=args.checkpoint_dir,
+                       shards=args.shards, resume=args.resume, guard=pguard)
     # one shared edge-pad bucket across the whole batch (per-graph buckets
     # would pad to different sizes and recompile)
     e_pad = next_multiple(max(g.n_edges for g in graphs) or 1,
                           pool.edge_bucket)
     with pool:
         sessions = [pool.open(g, tau=args.tau, e_pad=e_pad) for g in graphs]
+        if args.preempt_after:
+            # TEST HOOK (kill-and-resume smoke): real SIGTERM at this stage
+            # boundary of the FIRST session's first decomposition
+            ck = sessions[0].checkpointer
+            if ck is None:
+                raise SystemExit("--preempt-after requires --checkpoint-dir")
+            ck.preempt_after_stage = args.preempt_after
 
         worst_syncs, failures = 0, []
         # per-query results are COLLECTED here and logged in one pass after
@@ -163,30 +179,39 @@ def serve_graph_diameter(args) -> int:
         t0 = time.perf_counter()
         cold: list[float] = []  # first query per session (session 0 compiles)
         warm: list[float] = []
-        with guard.measured_transfers() as meter:
-            for round_idx in range(args.queries):
-                if round_idx == 1:
-                    # the SessionMetrics contract: from here on, NOTHING may
-                    # build a backend or upload an edge array
-                    builds0 = pool.metrics.backend_builds
-                    uploads0 = pool.metrics.edge_uploads
-                if round_idx and traces:
-                    # replay: one mutation batch per session between rounds
-                    # (update work counts in DynamicMetrics, not the
-                    # warm-query residency counters — the buffers are
-                    # mutated IN PLACE)
+        try:
+            with (pguard if pguard is not None
+                  else contextlib.nullcontext()), \
+                    guard.measured_transfers() as meter:
+                for round_idx in range(args.queries):
+                    if round_idx == 1:
+                        # the SessionMetrics contract: from here on, NOTHING
+                        # may build a backend or upload an edge array
+                        builds0 = pool.metrics.backend_builds
+                        uploads0 = pool.metrics.edge_uploads
+                    if round_idx and traces:
+                        # replay: one mutation batch per session between
+                        # rounds (update work counts in DynamicMetrics, not
+                        # the warm-query residency counters — the buffers
+                        # are mutated IN PLACE)
+                        for i, sess in enumerate(sessions):
+                            if round_idx - 1 < len(traces[i]):
+                                rep = sess.apply_updates(
+                                    traces[i][round_idx - 1])
+                                update_lines.append((i, round_idx - 1, rep))
                     for i, sess in enumerate(sessions):
-                        if round_idx - 1 < len(traces[i]):
-                            rep = sess.apply_updates(traces[i][round_idx - 1])
-                            update_lines.append((i, round_idx - 1, rep))
-                for i, sess in enumerate(sessions):
-                    tq = time.perf_counter()
-                    res = sess.estimate(estimator)
-                    dt = time.perf_counter() - tq
-                    (cold if round_idx == 0 else warm).append(dt)
-                    syncs = _query_syncs(res)
-                    worst_syncs = max(worst_syncs, syncs)
-                    records.append((i, round_idx, res, syncs, dt))
+                        tq = time.perf_counter()
+                        res = sess.estimate(estimator)
+                        dt = time.perf_counter() - tq
+                        (cold if round_idx == 0 else warm).append(dt)
+                        syncs = _query_syncs(res)
+                        worst_syncs = max(worst_syncs, syncs)
+                        records.append((i, round_idx, res, syncs, dt))
+        except Preempted as p:
+            log.warning("preempted at stage %d; checkpoint durable at %s — "
+                        "rerun with --resume to finish byte-identically",
+                        p.stage, p.path)
+            return EXIT_PREEMPTED
         total = time.perf_counter() - t0
 
         for i, u_idx, rep in update_lines:
@@ -289,6 +314,19 @@ def main() -> int:
     ap.add_argument("--queries", type=int, default=2,
                     help="diameter queries per resident session")
     ap.add_argument("--estimator", default="cluster", choices=ESTIMATORS)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="back each session with a partition-sharded "
+                         "GraphStore of this many shards (0 = flat storage)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="arm per-session stage-boundary checkpointing "
+                         "(preemption-safe serving; subdirs g0, g1, ...)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue decompositions from the latest stage "
+                         "checkpoints in --checkpoint-dir")
+    ap.add_argument("--preempt-after", type=int, default=0,
+                    help="TEST HOOK: deliver a real SIGTERM at this stage "
+                         "boundary of the first session's decomposition "
+                         "(kill-and-resume smoke; requires --checkpoint-dir)")
     ap.add_argument("--update-trace", type=int, default=0,
                     help="replay this many temporal_trace mutation batches "
                          "per session, interleaved with the query rounds "

@@ -1,9 +1,22 @@
-"""Error-feedback int8 gradient compression for the DP all-reduce.
+"""Compression codecs: lossy int8 for gradients, lossless int32 for graphs.
 
-Per-tensor symmetric int8 quantization with an error-feedback residual
-(Seide et al. / EF-SGD): the quantization error of step t is added back
-into the gradient at step t+1, so the residual telescopes and the compressed
-optimizer matches uncompressed SGD/Adam trajectories to first order.
+Two regimes live here:
+
+  * Error-feedback int8 gradient compression for the DP all-reduce
+    (Seide et al. / EF-SGD): per-tensor symmetric int8 quantization with
+    an error-feedback residual — the quantization error of step t is
+    added back at step t+1, so the residual telescopes and the compressed
+    optimizer matches uncompressed SGD/Adam to first order. LOSSY by
+    construction; fine for gradients, forbidden for graph structure.
+
+  * ``pack_i32``/``unpack_i32`` — LOSSLESS host-side packing for the
+    int32 edge arrays held by ``graph.storage.GraphStore``. Slab columns
+    (sorted destination ids, near-sorted sources after the
+    cluster-locality relabeling) are delta-encoded, zig-zag mapped to
+    unsigned, and stored at the minimal width that fits — a dst column of
+    a sorted slab typically packs to 1–2 bytes/edge instead of 4. The
+    round-trip is exact (byte-identical int32 out), so compressed
+    residency never perturbs the decomposition.
 
 The compressed all-reduce runs inside shard_map: quantize locally, all-to-all
 int8 chunks (reduce-scatter shape), local fp32 reduction, re-quantize the
@@ -14,11 +27,69 @@ visible in the HLO (counted by the roofline pass).
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Lossless int32 packing (GraphStore slab residency)
+# ---------------------------------------------------------------------------
+
+
+class PackedI32(NamedTuple):
+    """A losslessly packed int32 column: zig-zag deltas at minimal width.
+
+    ``data`` holds the unsigned zig-zag deltas in the narrowest numpy
+    dtype that fits their maximum; ``first`` anchors the delta chain.
+    ``unpack_i32`` reproduces the original array byte-identically.
+    """
+
+    data: np.ndarray
+    n: int
+    first: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.data.nbytes)
+
+
+def pack_i32(x: np.ndarray) -> PackedI32:
+    """Delta + zig-zag + minimal-width packing of an int32 array.
+
+    Deltas of int32 values need 33 bits in the worst case, so the
+    intermediate math runs in int64; zig-zag folds the sign
+    (``z = (d << 1) ^ (d >> 63)``) so small negative deltas stay small
+    unsigned values, then the column is stored at the narrowest of
+    uint8/16/32/64 that holds the maximum.
+    """
+    x = np.ascontiguousarray(np.asarray(x, dtype=np.int32))
+    if x.ndim != 1:
+        raise ValueError(f"pack_i32 expects a 1-d column, got shape {x.shape}")
+    if x.size == 0:
+        return PackedI32(np.zeros(0, np.uint8), 0, 0)
+    wide = x.astype(np.int64)
+    d = np.diff(wide, prepend=wide[:1])
+    z = ((d << 1) ^ (d >> 63)).astype(np.uint64)
+    z[0] = 0  # the anchor rides in `first`, not the delta stream
+    hi = int(z.max()) if z.size else 0
+    for dt in (np.uint8, np.uint16, np.uint32, np.uint64):
+        if hi <= np.iinfo(dt).max:
+            return PackedI32(z.astype(dt), int(x.size), int(x[0]))
+    raise AssertionError("unreachable: uint64 always fits a zig-zag delta")
+
+
+def unpack_i32(p: PackedI32) -> np.ndarray:
+    """Exact inverse of :func:`pack_i32` — byte-identical int32 out."""
+    if p.n == 0:
+        return np.zeros(0, np.int32)
+    z = p.data.astype(np.uint64)
+    d = (z >> np.uint64(1)).astype(np.int64) ^ -(z & np.uint64(1)).astype(np.int64)
+    d[0] = p.first
+    return np.cumsum(d).astype(np.int32)
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -26,6 +26,36 @@ from repro.common import get_logger
 log = get_logger("repro.fault")
 
 
+class Preempted(Exception):
+    """A decomposition was preempted at a stage boundary AFTER its
+    checkpoint was durably written.
+
+    Raised by the stage-boundary checkpoint hook (``core.engine.
+    StageCheckpointer``) when a ``PreemptionGuard`` observed SIGTERM /
+    SIGINT: the current stage finishes, the full state (planes + RNG key
+    + stage scalars + GraphStore buffers) is saved, and THEN this fires —
+    so catching it at the launcher and exiting with
+    :data:`EXIT_PREEMPTED` guarantees ``--resume`` restarts from the
+    exact boundary and finishes byte-identically.
+
+    Deliberately a direct ``Exception`` subclass (not ``RuntimeError``):
+    :func:`retriable` retries ``RuntimeError`` by default, and a
+    preemption must never be retried in place.
+    """
+
+    def __init__(self, stage: int, path: Optional[str], signum: Optional[int] = None):
+        super().__init__(
+            f"preempted at stage boundary {stage}; checkpoint at {path}")
+        self.stage = stage
+        self.path = path
+        self.signum = signum
+
+
+# BSD EX_TEMPFAIL: the conventional "re-run me" exit status the launchers
+# return after a clean preemption checkpoint.
+EXIT_PREEMPTED = 75
+
+
 class PreemptionGuard:
     """SIGTERM-aware context: `guard.should_stop` flips on preemption."""
 

@@ -435,6 +435,27 @@ class TestTransferGuardEquality:
         assert m.host_syncs == 1   # the mode's headline contract
         assert transfer_guarded.transfers == m.host_syncs + m.finalize_syncs
 
+    def test_checkpointed_decomposition_measured_equals_counted(
+            self, tmp_path, transfer_guarded):
+        """The extended equality contract: with a StageCheckpointer armed,
+        every device leaf the checkpoint writer materializes goes through
+        guard.fetch and lands in ``checkpoint_syncs`` — so
+        ``measured == host_syncs + finalize_syncs + checkpoint_syncs``
+        and the durability cost never hides inside the algorithmic
+        budget (``checkpoint_syncs`` stays OUT of total_host_syncs)."""
+        from repro.core import StageCheckpointer, cluster
+
+        # tau=4 keeps the stage threshold (8 tau log n) below n=512 so
+        # the stage loop — and with it the boundary hook — actually runs
+        ck = StageCheckpointer(str(tmp_path), every=1)
+        dec = cluster(_graph(), 4, seed=0, checkpointer=ck)
+        m = dec.metrics
+        assert ck.saves >= 1
+        assert m.checkpoint_syncs > 0
+        assert transfer_guarded.transfers == \
+            m.host_syncs + m.finalize_syncs + m.checkpoint_syncs
+        assert all(r for r in transfer_guarded.reasons())
+
     def test_pipeline_measured_equals_counted(self):
         from repro.core import ClusterQuotientEstimator, open_session
 

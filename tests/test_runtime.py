@@ -122,6 +122,41 @@ def test_preemption_guard_catches_sigterm():
         assert g.received == signal.SIGTERM
 
 
+def test_preemption_guard_restores_handlers_on_exit():
+    """The guard must put back whatever handlers were installed before it
+    — nesting a guard inside launcher-installed handlers (or pytest's)
+    must not leak its own handler past the with-block."""
+    seen = []
+    prev_term = signal.signal(signal.SIGTERM, lambda s, f: seen.append(s))
+    try:
+        with PreemptionGuard() as g:
+            assert signal.getsignal(signal.SIGTERM) == g._handler
+        assert signal.getsignal(signal.SIGTERM) is not g._handler
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert seen == [signal.SIGTERM]   # the outer handler is back
+        assert not g.should_stop          # the exited guard saw nothing
+    finally:
+        signal.signal(signal.SIGTERM, prev_term)
+
+
+def test_preemption_guard_is_not_retriable():
+    """Preempted must escape retriable() (the wrapper retries
+    RuntimeError): a preemption is a clean exit, never an in-place retry."""
+    from repro.runtime.fault import Preempted
+
+    calls = {"n": 0}
+
+    def preempts():
+        calls["n"] += 1
+        raise Preempted(3, "/tmp/ckpt/step_3")
+
+    with pytest.raises(Preempted) as e:
+        retriable(preempts, base_delay=0.001)()
+    assert calls["n"] == 1          # no retry
+    assert e.value.stage == 3
+    assert not isinstance(e.value, RuntimeError)
+
+
 def test_retriable_retries_then_succeeds():
     calls = {"n": 0}
 
@@ -133,6 +168,25 @@ def test_retriable_retries_then_succeeds():
 
     assert retriable(flaky, base_delay=0.001)() == "ok"
     assert calls["n"] == 3
+
+
+def test_retriable_exhausts_with_deterministic_backoff(monkeypatch):
+    """Retry count and the doubling backoff schedule are exact: the real
+    ``time.sleep`` is patched out, so the test asserts the SCHEDULE
+    (0.1, 0.2, 0.4, ...) rather than measuring wall-clock."""
+    slept = []
+    # det: test patches time.sleep to record the backoff schedule, no real waiting
+    monkeypatch.setattr("repro.runtime.fault.time.sleep", slept.append)
+    calls = {"n": 0}
+
+    def always_fails():
+        calls["n"] += 1
+        raise OSError(f"boom {calls['n']}")
+
+    with pytest.raises(OSError, match="boom 4"):
+        retriable(always_fails, retries=3, base_delay=0.1)()
+    assert calls["n"] == 4                      # 1 try + 3 retries
+    assert slept == [0.1, 0.2, 0.4]             # deterministic doubling
 
 
 def test_straggler_monitor_flags_outliers():
