@@ -10,9 +10,12 @@ from outside the PRNG-key discipline:
           random.*): a default_rng(seed)/Generator instance is fine,
           the global-state API is not.
   DET002  time-dependent values (time.time/monotonic/perf_counter,
-          datetime.now) inside decomposition modules — wall-clock must
-          never reach a decision; benchmark timing belongs in the
-          harness, not the algorithm.
+          datetime.now). Inside decomposition modules wall-clock must
+          never reach a decision; in every other ``repro`` module bare
+          clock reads must route through the one sanctioned seam,
+          ``repro.runtime.telemetry.clock()``/``wall_time()`` (the
+          DET002 twin of ``guard.fetch``), so timing sites stay
+          auditable. ``runtime/telemetry`` itself is the exempt seam.
   DET003  iteration-order dependence on sets: materializing a set into
           an ordered container (list/tuple/sorted-less np.fromiter/
           np.array, or a bare for-loop) makes downstream output depend
@@ -21,8 +24,9 @@ from outside the PRNG-key discipline:
           subsystem (``dirty_centers``).
   DET004  builtin hash() — PYTHONHASHSEED-dependent for strings.
 
-Rules DET002–DET004 apply only inside decomposition modules (engine,
-state, dynamic, quotient, cluster, kernels); DET001 applies everywhere.
+Rules DET003–DET004 apply only inside decomposition modules (engine,
+state, dynamic, quotient, cluster, kernels); DET002 applies to every
+``repro`` module except the telemetry seam; DET001 applies everywhere.
 """
 from __future__ import annotations
 
@@ -33,6 +37,10 @@ from repro.analysis.common import Finding, SourceFile, dotted_name, finding
 
 _DECOMP_MARKERS = ("core/engine", "core/state", "core/dynamic",
                    "core/quotient", "core/cluster", "kernels/")
+
+# the ONE module allowed to read the clock directly — everything else in
+# repro/ must call telemetry.clock()/wall_time()
+_CLOCK_SEAM_MARKERS = ("runtime/telemetry",)
 
 # attributes known (module contract) to hold builtin sets
 _KNOWN_SET_ATTRS = {"dirty_centers"}
@@ -49,6 +57,15 @@ _ORDERING_CONSUMERS = {"list", "tuple", "np.fromiter", "numpy.fromiter",
 def _is_decomp_module(path: str) -> bool:
     p = path.replace("\\", "/")
     return any(m in p for m in _DECOMP_MARKERS)
+
+
+def _clock_scope(path: str) -> bool:
+    """DET002 applies to every repro module except the sanctioned
+    telemetry seam (and to all decomposition modules regardless)."""
+    p = path.replace("\\", "/")
+    if any(m in p for m in _CLOCK_SEAM_MARKERS):
+        return False
+    return "repro/" in p or _is_decomp_module(path)
 
 
 def _is_set_expr(node: ast.AST, set_names: Set[str]) -> bool:
@@ -68,10 +85,11 @@ def _is_set_expr(node: ast.AST, set_names: Set[str]) -> bool:
 
 class _Scope(ast.NodeVisitor):
     def __init__(self, sf: SourceFile, findings: List[Finding],
-                 decomp: bool):
+                 decomp: bool, clocked: bool):
         self.sf = sf
         self.findings = findings
         self.decomp = decomp
+        self.clocked = clocked
         self.set_names: Set[str] = set()
 
     def _flag(self, code: str, node: ast.AST, msg: str) -> None:
@@ -100,12 +118,18 @@ class _Scope(ast.NodeVisitor):
                 self._flag("DET001", node,
                            "default_rng() without a seed is entropy-"
                            "seeded; pass an explicit seed")
-        if self.decomp:
-            # DET002 — wall clock inside the algorithm
-            if name in _TIME_CALLS:
+        # DET002 — bare wall clock outside the sanctioned seam
+        if self.clocked and name in _TIME_CALLS:
+            if self.decomp:
                 self._flag("DET002", node,
                            f"{name}() inside a decomposition module: "
                            "wall-clock must never reach a decision")
+            else:
+                self._flag("DET002", node,
+                           f"{name}() bypasses the sanctioned clock seam; "
+                           "route timing through repro.runtime.telemetry."
+                           "clock()/wall_time()")
+        if self.decomp:
             # DET003 — ordered materialization of a set
             if name in _ORDERING_CONSUMERS and node.args and \
                     _is_set_expr(node.args[0], self.set_names):
@@ -137,5 +161,6 @@ class _Scope(ast.NodeVisitor):
 
 def check(sf: SourceFile) -> List[Finding]:
     findings: List[Finding] = []
-    _Scope(sf, findings, _is_decomp_module(sf.path)).visit(sf.tree)
+    _Scope(sf, findings, _is_decomp_module(sf.path),
+           _clock_scope(sf.path)).visit(sf.tree)
     return findings

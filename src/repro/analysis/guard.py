@@ -31,22 +31,36 @@ The equality contract proven by the tier-1 tests and ``kernel_bench``:
 from __future__ import annotations
 
 import contextlib
+from collections import Counter
 from dataclasses import dataclass, field
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 
 @dataclass
 class TransferMeter:
-    """Counts sanctioned fetches inside a ``measured_transfers`` region."""
+    """Counts sanctioned fetches inside a ``measured_transfers`` region.
+
+    Per-reason accounting is aggregated (one ``Counter`` entry per
+    distinct reason string), so a meter's memory is bounded by the number
+    of distinct fetch sites — not by the number of fetches. A long serve
+    run used to accumulate one ``(reason, size)`` tuple per fetch.
+    """
 
     transfers: int = 0
     elements: int = 0
-    events: List[Tuple[str, int]] = field(default_factory=list)
+    reason_counts: Counter = field(default_factory=Counter)
+    reason_elements: Counter = field(default_factory=Counter)
 
     def reasons(self) -> List[str]:
-        return [r for r, _ in self.events]
+        """Distinct fetch reasons seen in this region, first-seen order."""
+        return list(self.reason_counts)
+
+    def by_reason(self) -> Dict[str, Tuple[int, int]]:
+        """reason -> (fetch count, total elements fetched)."""
+        return {r: (int(c), int(self.reason_elements[r]))
+                for r, c in self.reason_counts.items()}
 
 
 # stack, not a single slot: harnesses nest (a bench region around an
@@ -56,6 +70,36 @@ _METERS: List[TransferMeter] = []
 
 def active_meter() -> Optional[TransferMeter]:
     return _METERS[-1] if _METERS else None
+
+
+def push_meter() -> TransferMeter:
+    """Push a meter-only region: counts sanctioned fetches without
+    touching the jax transfer guard (and without importing jax). This is
+    the attribution hook telemetry spans use — pushing a meter costs one
+    list append, adds zero host syncs, and composes with any ambient
+    ``measured_transfers`` region because ``fetch`` increments every
+    meter on the stack."""
+    meter = TransferMeter()
+    _METERS.append(meter)
+    return meter
+
+
+def pop_meter(meter: TransferMeter) -> TransferMeter:
+    # validate before popping: a mismatched pop must not eat someone
+    # else's meter on its way to raising
+    if not _METERS or _METERS[-1] is not meter:
+        raise RuntimeError("guard meter stack corrupted: non-LIFO pop")
+    return _METERS.pop()
+
+
+@contextlib.contextmanager
+def metered() -> Iterator[TransferMeter]:
+    """Context-manager form of ``push_meter``/``pop_meter``."""
+    meter = push_meter()
+    try:
+        yield meter
+    finally:
+        pop_meter(meter)
 
 
 @contextlib.contextmanager
@@ -77,15 +121,17 @@ def measured_transfers(level: str = "disallow") -> Iterator[TransferMeter]:
 def fetch(x, *, reason: str) -> np.ndarray:
     """The sanctioned device->host materialization. ``reason`` is
     mandatory and non-empty — it is the runtime twin of the ``# sync:``
-    pragma, and shows up in ``TransferMeter.events`` for auditing."""
+    pragma, and shows up in ``TransferMeter.by_reason()`` for auditing."""
     if not reason or not reason.strip():
         raise ValueError("guard.fetch requires a non-empty reason")
     import jax
 
     with jax.transfer_guard_device_to_host("allow"):
         out = np.asarray(x)
+    size = int(out.size)
     for m in _METERS:
         m.transfers += 1
-        m.elements += int(out.size)
-        m.events.append((reason, int(out.size)))
+        m.elements += size
+        m.reason_counts[reason] += 1
+        m.reason_elements[reason] += size
     return out

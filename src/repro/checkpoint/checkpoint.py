@@ -19,7 +19,6 @@ import os
 import re
 import shutil
 import tempfile
-import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -27,6 +26,7 @@ import numpy as np
 
 from repro.analysis import guard
 from repro.common import get_logger
+from repro.runtime import telemetry
 from repro.runtime.fault import retriable
 
 log = get_logger("repro.ckpt")
@@ -69,37 +69,40 @@ def save(
     os.makedirs(tmp)
 
     flat = _flatten(tree)
-    manifest = {"step": step, "extra": extra or {}, "leaves": {},
-                # det: wall-clock is write-provenance metadata only; restore never reads it back into compute
-                "written_at": time.time()}
-    for key, leaf in flat.items():
-        if isinstance(leaf, jax.Array):
-            # the sanctioned device->host path: metered by any active
-            # TransferMeter, so checkpoint durability cost shows up as
-            # EngineMetrics.checkpoint_syncs instead of hiding in the
-            # measured/counted sync-equality contract. Host numpy leaves
-            # (GraphStore mirrors) are not transfers and skip the meter.
-            leaf = guard.fetch(
-                leaf, reason=f"checkpoint save: materialize device leaf {key}")
-        arr = np.asarray(leaf)
-        fname = f"{key}.npy"
-        with open(os.path.join(tmp, fname), "wb") as f:
-            np.save(f, arr)
+    with telemetry.span("checkpoint.save", step=step, leaves=len(flat)):
+        manifest = {"step": step, "extra": extra or {}, "leaves": {},
+                    # wall-clock is write-provenance metadata only; restore
+                    # never reads it back into compute. wall_time() is the
+                    # determinism-lint sanctioned seam.
+                    "written_at": telemetry.wall_time()}
+        for key, leaf in flat.items():
+            if isinstance(leaf, jax.Array):
+                # the sanctioned device->host path: metered by any active
+                # TransferMeter, so checkpoint durability cost shows up as
+                # EngineMetrics.checkpoint_syncs instead of hiding in the
+                # measured/counted sync-equality contract. Host numpy leaves
+                # (GraphStore mirrors) are not transfers and skip the meter.
+                leaf = guard.fetch(
+                    leaf, reason=f"checkpoint save: materialize device leaf {key}")
+            arr = np.asarray(leaf)
+            fname = f"{key}.npy"
+            with open(os.path.join(tmp, fname), "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            }
+        mpath = os.path.join(tmp, "manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
-        manifest["leaves"][key] = {
-            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
-        }
-    mpath = os.path.join(tmp, "manifest.json")
-    with open(mpath, "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
 
-    if os.path.isdir(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)          # atomic on POSIX
-    _gc(ckpt_dir, keep)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic on POSIX
+        _gc(ckpt_dir, keep)
     log.info("checkpoint step %d -> %s (%d leaves)", step, final, len(flat))
     return final
 
@@ -137,26 +140,28 @@ def restore(
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    with telemetry.span("checkpoint.restore", step=step) as sp:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
 
-    flat_like = _flatten(like)
-    flat_sh = _flatten(shardings) if shardings is not None else {}
-    loaded = {}
-    for key, meta in manifest["leaves"].items():
-        if key not in flat_like:
-            log.warning("checkpoint leaf %s not in target tree; skipped", key)
-            continue
-        arr = np.load(os.path.join(d, meta["file"]))
-        sh = flat_sh.get(key)
-        loaded[key] = jax.device_put(arr, sh) if sh is not None else arr
-    missing = set(flat_like) - set(loaded)
-    if missing:
-        raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]}...")
+        flat_like = _flatten(like)
+        flat_sh = _flatten(shardings) if shardings is not None else {}
+        loaded = {}
+        for key, meta in manifest["leaves"].items():
+            if key not in flat_like:
+                log.warning("checkpoint leaf %s not in target tree; skipped", key)
+                continue
+            arr = np.load(os.path.join(d, meta["file"]))
+            sh = flat_sh.get(key)
+            loaded[key] = jax.device_put(arr, sh) if sh is not None else arr
+        missing = set(flat_like) - set(loaded)
+        if missing:
+            raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]}...")
+        sp.set(leaves=len(loaded))
 
-    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
-    ordered = [
-        loaded[_SEP.join(_path_part(p) for p in path)]
-        for path, _ in leaves_paths
-    ]
-    return jax.tree_util.tree_unflatten(treedef, ordered), manifest["extra"]
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        ordered = [
+            loaded[_SEP.join(_path_part(p) for p in path)]
+            for path, _ in leaves_paths
+        ]
+        return jax.tree_util.tree_unflatten(treedef, ordered), manifest["extra"]

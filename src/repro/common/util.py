@@ -7,11 +7,12 @@ from __future__ import annotations
 
 import logging
 import sys
-import time
 from typing import Any, Iterable
 
 import jax
 import numpy as np
+
+from repro.runtime.telemetry import clock
 
 
 def ceil_div(a: int, b: int) -> int:
@@ -69,15 +70,19 @@ def bench_engine_path() -> str:
 
 
 class Timer:
-    """Context-manager wall timer. ``with Timer() as t: ...; t.seconds``."""
+    """Context-manager wall timer. ``with Timer() as t: ...; t.seconds``.
+
+    Reads time through ``telemetry.clock()`` — the one determinism-lint
+    sanctioned clock seam — so every Timer site is covered without a
+    per-site ``# det:`` pragma."""
 
     def __enter__(self) -> "Timer":
-        self._t0 = time.perf_counter()
+        self._t0 = clock()
         self.seconds = 0.0
         return self
 
     def __exit__(self, *exc) -> None:
-        self.seconds = time.perf_counter() - self._t0
+        self.seconds = clock() - self._t0
 
 
 _LOGGERS: dict[str, logging.Logger] = {}

@@ -66,6 +66,7 @@ from repro.core.state import EngineState, INF
 from repro.graph.segment_ops import segment_min_triple
 from repro.graph.storage import EdgeStore, GraphStore
 from repro.graph.structures import MAX_WEIGHT
+from repro.runtime import telemetry
 
 log = get_logger("repro.dynamic")
 
@@ -387,18 +388,22 @@ def _recertify(session, dec: Decomposition) -> Tuple[Decomposition, int, int]:
     n = session.n_nodes
     if n == 0 or dec.final_c_dev is None:
         return dec, 0, 0
-    src, dst, w = session.flat_device_edges()
-    rounds = int(np.ceil(np.log2(max(n, 2)))) + 1
-    alive, fp_base = _forest_repair(
-        src, dst, w, dec.final_c_dev, dec.final_pathw_dev,
-        n=n, k_rounds=rounds)
-    state = _repair_state(dec.final_c_dev, fp_base, alive, n, confine=True)
-    state, stats = session.backend.grow(
-        state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
-        jnp.int32(_REPAIR_NUM_IT), "complete")
-    c_dev, p_dev, n_single = _finalize_repair(state, n=n)
-    fc, fp, grow_steps, singles = _fetch_repair_planes(
-        c_dev, p_dev, (stats.steps, n_single))
+    with telemetry.span("dynamic.recertify", n=n) as sp:
+        src, dst, w = session.flat_device_edges()
+        rounds = int(np.ceil(np.log2(max(n, 2)))) + 1
+        alive, fp_base = _forest_repair(
+            src, dst, w, dec.final_c_dev, dec.final_pathw_dev,
+            n=n, k_rounds=rounds)
+        state = _repair_state(dec.final_c_dev, fp_base, alive, n,
+                              confine=True)
+        state, stats = session.backend.grow(
+            state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
+            jnp.int32(_REPAIR_NUM_IT), "complete")
+        c_dev, p_dev, n_single = _finalize_repair(state, n=n)
+        fc, fp, grow_steps, singles = _fetch_repair_planes(
+            c_dev, p_dev, (stats.steps, n_single))
+        sp.set(pointer_rounds=rounds, supersteps=1 + int(grow_steps),
+               singletons=int(singles))
     if singles:
         log.info("recertify: %d unreachable nodes became singletons", singles)
     dec = _make_decomposition(dec, fc, fp, c_dev, p_dev, 0,
@@ -629,12 +634,15 @@ def apply_updates(session, batch: UpdateBatch, *,
             # alternative) come out dead. The dead fraction IS the dirty
             # region and picks repair vs full rebuild.
             rounds = int(np.ceil(np.log2(max(n, 2)))) + 1
-            alive, fp_base = _forest_repair(
-                store.src, store.dst, store.weight, fc_dev, fp_dev,
-                n=n, k_rounds=rounds)
-            dead = int(guard.fetch(jnp.sum(~alive),
-                                   reason="dynamic: dead-node count picks "
-                                          "repair vs rebuild"))
+            with telemetry.span("dynamic.forest_repair", n=n,
+                                pointer_rounds=rounds) as sp:
+                alive, fp_base = _forest_repair(
+                    store.src, store.dst, store.weight, fc_dev, fp_dev,
+                    n=n, k_rounds=rounds)
+                dead = int(guard.fetch(jnp.sum(~alive),
+                                       reason="dynamic: dead-node count picks "
+                                              "repair vs rebuild"))
+                sp.set(dead=dead)
             m.update_syncs += 1
             m.update_supersteps += 1   # the parent-selection edge sweep
             m.pointer_rounds += rounds
@@ -643,13 +651,16 @@ def apply_updates(session, batch: UpdateBatch, *,
             action = ("rebuild" if dirty_fraction > session.rebuild_fraction
                       else "repair")
         if action == "rebuild":
-            dec = _full_decomposition(session)
-            m.full_rebuilds += 1
-            m.rebuild_supersteps += dec.growing_steps
-            m.baseline_supersteps = dec.growing_steps
-            # fresh decompositions are not forest-witnessed (stop-variant
-            # races) — recertify so later repairs stay incremental
-            dec, r_sweeps, r_rounds = _recertify(session, dec)
+            with telemetry.span("dynamic.rebuild", n=n,
+                                dirty_fraction=dirty_fraction) as sp:
+                dec = _full_decomposition(session)
+                m.full_rebuilds += 1
+                m.rebuild_supersteps += dec.growing_steps
+                m.baseline_supersteps = dec.growing_steps
+                # fresh decompositions are not forest-witnessed (stop-variant
+                # races) — recertify so later repairs stay incremental
+                dec, r_sweeps, r_rounds = _recertify(session, dec)
+                sp.set(supersteps=dec.growing_steps + r_sweeps)
             m.update_supersteps += r_sweeps
             m.pointer_rounds += r_rounds
             steps += r_sweeps
@@ -660,14 +671,16 @@ def apply_updates(session, batch: UpdateBatch, *,
                 # confined regrow: re-attach the retracted region from its
                 # alive boundary (runs to ITS fixpoint; the wave cannot
                 # leave the dead region, so depth = dead-region hop depth)
-                state = _repair_state(fc_dev, fp_base, alive, n,
-                                      confine=True)
-                g_cap = (jnp.int32(_REPAIR_NUM_IT) if regrow_cap is None
-                         else jnp.int32(int(regrow_cap)))
-                state, stats = session.backend.grow(
-                    state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
-                    g_cap, "complete")
-                grow_steps = stats.steps
+                with telemetry.span("dynamic.regrow", n=n, dead=dead,
+                                    cap=regrow_cap):
+                    state = _repair_state(fc_dev, fp_base, alive, n,
+                                          confine=True)
+                    g_cap = (jnp.int32(_REPAIR_NUM_IT) if regrow_cap is None
+                             else jnp.int32(int(regrow_cap)))
+                    state, stats = session.backend.grow(
+                        state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
+                        g_cap, "complete")
+                    grow_steps = stats.steps
             else:
                 state = _repair_state(
                     fc_dev, fp_base, jnp.ones(n, bool), n, confine=False)
@@ -680,17 +693,21 @@ def apply_updates(session, batch: UpdateBatch, *,
                 # up — a global rewire is tightened incrementally over the
                 # next batches (or by the next full rebuild) instead of
                 # stalling this one. tighten_cap=None runs to fixpoint.
-                cap = (jnp.int32(_REPAIR_NUM_IT) if tighten_cap is None
-                       else jnp.int32(int(tighten_cap)))
-                state = state._replace(
-                    is_center=state.pathw == jnp.int32(0))
-                state, tstats = session.backend.grow(
-                    state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
-                    cap, "complete")
-                tighten_steps = tstats.steps
-            c_dev, p_dev, n_single = _finalize_repair(state, n=n)
-            fc, fp, g_steps, t_steps, singles = _fetch_repair_planes(
-                c_dev, p_dev, (grow_steps, tighten_steps, n_single))
+                with telemetry.span("dynamic.relax", n=n, cap=tighten_cap):
+                    cap = (jnp.int32(_REPAIR_NUM_IT) if tighten_cap is None
+                           else jnp.int32(int(tighten_cap)))
+                    state = state._replace(
+                        is_center=state.pathw == jnp.int32(0))
+                    state, tstats = session.backend.grow(
+                        state, jnp.int32(_REPAIR_DELTA), jnp.int32(0),
+                        cap, "complete")
+                    tighten_steps = tstats.steps
+            with telemetry.span("dynamic.finalize", n=n) as sp:
+                c_dev, p_dev, n_single = _finalize_repair(state, n=n)
+                fc, fp, g_steps, t_steps, singles = _fetch_repair_planes(
+                    c_dev, p_dev, (grow_steps, tighten_steps, n_single))
+                sp.set(supersteps=int(g_steps) + int(t_steps),
+                       singletons=int(singles))
             m.update_syncs += 1
             steps += g_steps + t_steps
             m.update_supersteps += g_steps + t_steps
@@ -795,18 +812,22 @@ def solve_session_quotient(session, pm) -> Tuple[int, np.ndarray, bool]:
         st.dirty_centers.clear()
         return 0, np.zeros(k, np.int64), k <= 1
 
-    if st.dq is None or st.quotient_stale or st.dq_counters is None:
-        dq = build_quotient_device(session.edges, dec,
-                                   backend=session.backend)
-    else:
-        dirty_ids = np.fromiter(  # det: order-insensitive — ids only scatter into boolean dirty masks
-            st.dirty_centers, np.int64, count=len(st.dirty_centers))
-        sub_src, sub_dst, sub_w, sub_mask, _ = _dirty_incident_slice(
-            store, dec.final_c, dirty_ids)
-        dq = quotient_update_device(
-            st.dq, st.dq_counters[1], (sub_src, sub_dst, sub_w, sub_mask),
-            dec.final_c_dev, dec.final_pathw_dev, dirty_ids, n)
-    k, mq, wmax, wsum = fetch_quotient_counters(dq)
+    with telemetry.span("quotient.build", dynamic=True) as sp:
+        if st.dq is None or st.quotient_stale or st.dq_counters is None:
+            dq = build_quotient_device(session.edges, dec,
+                                       backend=session.backend)
+            sp.set(incremental=False)
+        else:
+            dirty_ids = np.fromiter(  # det: order-insensitive — ids only scatter into boolean dirty masks
+                st.dirty_centers, np.int64, count=len(st.dirty_centers))
+            sub_src, sub_dst, sub_w, sub_mask, _ = _dirty_incident_slice(
+                store, dec.final_c, dirty_ids)
+            dq = quotient_update_device(
+                st.dq, st.dq_counters[1], (sub_src, sub_dst, sub_w, sub_mask),
+                dec.final_c_dev, dec.final_pathw_dev, dirty_ids, n)
+            sp.set(incremental=True, dirty_centers=len(dirty_ids))
+        k, mq, wmax, wsum = fetch_quotient_counters(dq)
+        sp.set(clusters=k, edges=mq)
     pm.quotient_syncs += 1
     pm.n_quotient_edges = mq
     st.dq, st.dq_counters = dq, (k, mq, wmax, wsum)
@@ -815,7 +836,9 @@ def solve_session_quotient(session, pm) -> Tuple[int, np.ndarray, bool]:
     if k <= 1:
         st.solution = (0, np.zeros(k, np.int64), True, 0)
         return 0, np.zeros(k, np.int64), True
-    diam, ecc, connected, steps = solve_device_quotient(dq, k, mq, wmax)
+    with telemetry.span("quotient.solve", dynamic=True, clusters=k) as sp:
+        diam, ecc, connected, steps = solve_device_quotient(dq, k, mq, wmax)
+        sp.set(supersteps=steps)
     pm.solve_syncs += 1
     pm.solve_supersteps = steps
     st.solution = (diam, ecc, connected, steps)

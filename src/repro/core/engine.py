@@ -59,6 +59,7 @@ from repro.analysis import guard
 from repro.checkpoint import checkpoint as ckpt
 from repro.common import get_logger
 from repro.core.backend import RelaxBackend, dispatch_grow
+from repro.runtime import telemetry
 from repro.runtime.fault import Preempted, PreemptionGuard
 from repro.core.state import (
     EngineState,
@@ -481,10 +482,13 @@ def _finalize(
     state = finalize_singletons(state)
     fc_dev = state.final_c[:n]
     fp_dev = state.final_pathw[:n]
-    # ONE packed device->host fetch for both final planes
-    planes = guard.fetch(jnp.stack([fc_dev, fp_dev]),
-                         reason="finalize: packed (final_c, final_pathw)")
-    metrics.finalize_syncs += 1
+    with telemetry.span("engine.finalize", n=n) as sp:
+        # ONE packed device->host fetch for both final planes
+        planes = guard.fetch(jnp.stack([fc_dev, fp_dev]),
+                             reason="finalize: packed (final_c, final_pathw)")
+        metrics.finalize_syncs += 1
+        sp.set(supersteps=total_steps, halo_bytes=metrics.halo_bytes,
+               checkpoint_syncs=metrics.checkpoint_syncs)
     final_c, final_pathw = planes[0], planes[1]
     assert (final_pathw < np.int32(INF)).all(), "uncovered node escaped finalization"
     return Decomposition(
@@ -580,16 +584,21 @@ def run_cluster(
                      checkpointer.ckpt_dir)
 
     while stage < max_stages and u_host >= threshold:
-        state, delta, stats = _cluster_stage(
-            state, jax.random.fold_in(key, stage), delta,
-            jnp.int32(u_host), p_scale, max_delta, num_it, graph_args,
-            spec=spec, variant=variant, n=n,
-            max_resamples=max_resamples,
-        )
-        # the stage's single host synchronization: the stop-decision scalars
-        (n_new, steps, grows, resamples, u_host,
-         launches, ksteps, dead, delta_host) = map(int, guard.fetch(
-             stats, reason="stage stop decision: packed int32 stats"))
+        with telemetry.span("engine.stage", stage=stage) as sp:
+            state, delta, stats = _cluster_stage(
+                state, jax.random.fold_in(key, stage), delta,
+                jnp.int32(u_host), p_scale, max_delta, num_it, graph_args,
+                spec=spec, variant=variant, n=n,
+                max_resamples=max_resamples,
+            )
+            # the stage's single host synchronization: the stop-decision
+            # scalars
+            (n_new, steps, grows, resamples, u_host,
+             launches, ksteps, dead, delta_host) = map(int, guard.fetch(
+                 stats, reason="stage stop decision: packed int32 stats"))
+            sp.set(centers=n_new, supersteps=steps, grow_calls=grows,
+                   kernel_launches=launches, dma_stall_blocks=dead,
+                   uncovered=u_host)
         metrics.host_syncs += 1
         metrics.grow_calls += grows
         metrics.resamples += resamples
@@ -649,13 +658,16 @@ def run_cluster2(
         if u_host == 0:
             break
         p = 1.0 if i == stages else min(1.0, (2.0 ** i) / n)
-        state, stats = _cluster2_stage(
-            state, jax.random.fold_in(key, i), jnp.int32(delta),
-            jnp.float32(p), num_it, graph_args, spec=spec, n=n,
-        )
-        (n_new, steps, u_host,
-         launches, ksteps, dead) = map(int, guard.fetch(
-             stats, reason="cluster2 stage: packed int32 stats"))
+        with telemetry.span("engine.stage", stage=i, variant="cluster2") as sp:
+            state, stats = _cluster2_stage(
+                state, jax.random.fold_in(key, i), jnp.int32(delta),
+                jnp.float32(p), num_it, graph_args, spec=spec, n=n,
+            )
+            (n_new, steps, u_host,
+             launches, ksteps, dead) = map(int, guard.fetch(
+                 stats, reason="cluster2 stage: packed int32 stats"))
+            sp.set(centers=n_new, supersteps=steps, kernel_launches=launches,
+                   dma_stall_blocks=dead, uncovered=u_host)
         metrics.host_syncs += 1
         metrics.kernel_launches += launches
         metrics.kernel_supersteps += ksteps
@@ -801,13 +813,17 @@ def run_oneshot(
     graph_args = backend.graph_args()
     key = jax.random.PRNGKey(seed)
 
-    state, stats = _oneshot_stage(
-        state, key, p, shift_max, shift_scale, jnp.int32(max_delta),
-        num_it, graph_args, spec=spec, n=n, deterministic=deterministic,
-    )
-    # the decomposition's single host synchronization
-    (n_new, steps, u_host, launches, ksteps, dead) = map(int, guard.fetch(
-        stats, reason="oneshot: packed int32 stats, the only sync"))
+    with telemetry.span("engine.oneshot", n=n,
+                        deterministic=deterministic) as sp:
+        state, stats = _oneshot_stage(
+            state, key, p, shift_max, shift_scale, jnp.int32(max_delta),
+            num_it, graph_args, spec=spec, n=n, deterministic=deterministic,
+        )
+        # the decomposition's single host synchronization
+        (n_new, steps, u_host, launches, ksteps, dead) = map(int, guard.fetch(
+            stats, reason="oneshot: packed int32 stats, the only sync"))
+        sp.set(centers=n_new, supersteps=steps, kernel_launches=launches,
+               dma_stall_blocks=dead, uncovered=u_host)
     metrics.stages = 1
     metrics.host_syncs = 1
     metrics.grow_calls = 1

@@ -48,6 +48,7 @@ from repro.core.quotient import (
 )
 from repro.analysis import guard
 from repro.core.session import GraphSession, tau_for
+from repro.runtime import telemetry
 
 log = get_logger("repro.estimators")
 
@@ -179,17 +180,21 @@ def _device_quotient_solve(edges, dec: Decomposition, backend,
                            pm: PipelineMetrics):
     """quotient + local solve, device-resident. Returns
     (phi_quotient, eccentricities, connected)."""
-    dq = build_quotient_device(edges, dec, backend=backend)
-    if dq is None:  # no nodes or no edges: quotient is trivially empty
-        k = dec.n_clusters
-        return 0, np.zeros(k, np.int64), k <= 1
-    k, m, wmax, _ = _fetch_quotient_counters(dq, pm)
-    pm.n_quotient_edges = m
+    with telemetry.span("quotient.build") as sp:
+        dq = build_quotient_device(edges, dec, backend=backend)
+        if dq is None:  # no nodes or no edges: quotient is trivially empty
+            k = dec.n_clusters
+            return 0, np.zeros(k, np.int64), k <= 1
+        k, m, wmax, _ = _fetch_quotient_counters(dq, pm)
+        pm.n_quotient_edges = m
+        sp.set(clusters=k, edges=m)
     if k <= 1:
         return 0, np.zeros(k, np.int64), True
-    diam, ecc, connected, steps = solve_device_quotient(dq, k, m, wmax)
-    pm.solve_syncs += 1
-    pm.solve_supersteps = steps
+    with telemetry.span("quotient.solve", clusters=k) as sp:
+        diam, ecc, connected, steps = solve_device_quotient(dq, k, m, wmax)
+        pm.solve_syncs += 1
+        pm.solve_supersteps = steps
+        sp.set(supersteps=steps)
     return diam, ecc, connected
 
 
@@ -222,49 +227,54 @@ def _cascade_quotient_solve(edges, dec: Decomposition, backend,
     from repro.core.backend import SingleDeviceBackend
     from repro.core.engine import run_cluster, run_oneshot
 
-    dq = build_quotient_device(edges, dec, backend=backend)
-    if dq is None:  # no nodes or no edges: quotient is trivially empty
-        k = dec.n_clusters
-        return 0, np.zeros(k, np.int64), k <= 1, 0
-    k, m, wmax, wsum = _fetch_quotient_counters(dq, pm)
-    pm.n_quotient_edges = m
+    with telemetry.span("quotient.build") as sp:
+        dq = build_quotient_device(edges, dec, backend=backend)
+        if dq is None:  # no nodes or no edges: quotient is trivially empty
+            k = dec.n_clusters
+            return 0, np.zeros(k, np.int64), k <= 1, 0
+        k, m, wmax, wsum = _fetch_quotient_counters(dq, pm)
+        pm.n_quotient_edges = m
+        sp.set(clusters=k, edges=m)
     scale_total = 1
     radius_tail = 0   # sum_{l>=1} S_l * 2 R_l
     extra_steps = 0
     level = 0
     while level < max_levels and k > max(tau_solve, 1) and m > 0:
         level += 1
-        lv = quotient_as_edgelist(dq, k, m, wmax, wsum)
-        be = SingleDeviceBackend.from_device(lv.n_nodes, lv.src, lv.dst,
-                                             lv.weight)
-        if level_mode == "oneshot":
-            dec_l = run_oneshot(
-                None, be, tau_for(k, cfg.tau_fraction),
-                gamma=cfg.gamma, seed=cfg.seed + level,
-                deterministic=cfg.deterministic,
-                max_steps_per_phase=cfg.max_steps_per_phase,
-                max_delta=lv.weight_sum + 1,
-            )
-        else:
-            dec_l = run_cluster(
-                None, be, tau_for(k, cfg.tau_fraction),
-                gamma=cfg.gamma, variant=cfg.variant,
-                delta0=max(lv.weight_sum // max(m, 1), 1),
-                seed=cfg.seed + level, max_stages=cfg.max_stages,
-                max_steps_per_phase=cfg.max_steps_per_phase,
-                max_delta=lv.weight_sum + 1,
-            )
-        scale_total *= lv.scale
-        radius_tail += scale_total * 2 * dec_l.radius
-        extra_steps += dec_l.growing_steps
-        pm.decompose_syncs += dec_l.metrics.host_syncs
-        pm.finalize_syncs += dec_l.metrics.finalize_syncs
-        dq = build_quotient_from_level(lv, dec_l)
-        k, m, wmax, wsum = _fetch_quotient_counters(dq, pm)
-        pm.level_syncs.append(dec_l.metrics.host_syncs
-                              + dec_l.metrics.finalize_syncs + 1)
-        pm.level_supersteps.append(dec_l.growing_steps)
-        pm.level_clusters.append(k)
+        with telemetry.span("cascade.level", level=level) as sp:
+            lv = quotient_as_edgelist(dq, k, m, wmax, wsum)
+            be = SingleDeviceBackend.from_device(lv.n_nodes, lv.src, lv.dst,
+                                                 lv.weight)
+            if level_mode == "oneshot":
+                dec_l = run_oneshot(
+                    None, be, tau_for(k, cfg.tau_fraction),
+                    gamma=cfg.gamma, seed=cfg.seed + level,
+                    deterministic=cfg.deterministic,
+                    max_steps_per_phase=cfg.max_steps_per_phase,
+                    max_delta=lv.weight_sum + 1,
+                )
+            else:
+                dec_l = run_cluster(
+                    None, be, tau_for(k, cfg.tau_fraction),
+                    gamma=cfg.gamma, variant=cfg.variant,
+                    delta0=max(lv.weight_sum // max(m, 1), 1),
+                    seed=cfg.seed + level, max_stages=cfg.max_stages,
+                    max_steps_per_phase=cfg.max_steps_per_phase,
+                    max_delta=lv.weight_sum + 1,
+                )
+            scale_total *= lv.scale
+            radius_tail += scale_total * 2 * dec_l.radius
+            extra_steps += dec_l.growing_steps
+            pm.decompose_syncs += dec_l.metrics.host_syncs
+            pm.finalize_syncs += dec_l.metrics.finalize_syncs
+            dq = build_quotient_from_level(lv, dec_l)
+            k, m, wmax, wsum = _fetch_quotient_counters(dq, pm)
+            pm.level_syncs.append(dec_l.metrics.host_syncs
+                                  + dec_l.metrics.finalize_syncs + 1)
+            pm.level_supersteps.append(dec_l.growing_steps)
+            pm.level_clusters.append(k)
+            sp.set(clusters=k, supersteps=dec_l.growing_steps,
+                   syncs=pm.level_syncs[-1])
         log.info("cascade level %d: %d clusters -> %d (scale=%d steps=%d)",
                  level, lv.n_nodes, k, lv.scale, dec_l.growing_steps)
         if k == lv.n_nodes:
@@ -277,9 +287,11 @@ def _cascade_quotient_solve(edges, dec: Decomposition, backend,
     pm.cascade_levels = level
     if k <= 1:
         return radius_tail, np.zeros(k, np.int64), True, extra_steps
-    diam, ecc, connected, steps = solve_device_quotient(dq, k, m, wmax)
-    pm.solve_syncs += 1
-    pm.solve_supersteps = steps
+    with telemetry.span("quotient.solve", clusters=k) as sp:
+        diam, ecc, connected, steps = solve_device_quotient(dq, k, m, wmax)
+        pm.solve_syncs += 1
+        pm.solve_supersteps = steps
+        sp.set(supersteps=steps)
     return (radius_tail + scale_total * diam,
             np.asarray(ecc, np.int64) * scale_total, connected, extra_steps)
 
@@ -542,7 +554,7 @@ def _sssp_from(session: GraphSession, source: int, delta: Optional[int]):
     src, dst, w = session.flat_device_edges()
     # dtype: delta=None means unbucketed; None and 0 pick the same bound
     dtype, inf = sssp_dtype_for(n, session.max_weight, delta or 0)
-    with enable_x64():
+    with enable_x64(), telemetry.span("sssp.solve", source=source) as sp:
         infj = jnp.asarray(inf, dtype)
         d0 = jnp.full(n, infj, dtype=dtype).at[source].set(0)
         wd = w.astype(dtype)
@@ -554,6 +566,7 @@ def _sssp_from(session: GraphSession, source: int, delta: Optional[int]):
         out = guard.fetch(jnp.concatenate(
             [d.astype(jnp.int64), k[None].astype(jnp.int64)]),
             reason="sssp estimator: packed (dist plane, supersteps)")
+        sp.set(supersteps=int(out[n]))
     return out[:n], int(out[n]), inf
 
 

@@ -48,6 +48,7 @@ from repro.core.cluster import _initial_delta
 from repro.core.engine import resolve_engine_mode
 from repro.graph.storage import EdgeStore, GraphStore
 from repro.graph.structures import EdgeList
+from repro.runtime import telemetry
 
 log = get_logger("repro.session")
 
@@ -168,8 +169,13 @@ class GraphSession:
         if mode_resolved != self.cfg.mode:
             self.cfg = dataclasses.replace(self.cfg, mode=mode_resolved)
 
-        if backend is None:
-            backend = self._build_backend()
+        # the open/pack cost center: backend construction uploads the edge
+        # buffers and (for the Pallas backend) runs the host blocking pass
+        with telemetry.span("session.open", nodes=edges.n_nodes,
+                            edges=edges.n_edges, mode=self.cfg.mode) as sp:
+            if backend is None:
+                backend = self._build_backend()
+            sp.set(backend=getattr(backend, "kind", "custom"))
         # a prebuilt backend counts too: its construction and edge upload
         # are this session's open cost (they happened, just outside) — the
         # warm-query contract must account for them either way
@@ -394,8 +400,10 @@ class GraphSession:
         if not self._spilled:
             return
         self._spilled = False
-        self.store.ensure_device()
-        self.backend = self._build_backend()
+        with telemetry.span("session.unspill", nodes=self._n_nodes,
+                            edges=self._n_edges):
+            self.store.ensure_device()
+            self.backend = self._build_backend()
         self.metrics.backend_builds += 1
         self.metrics.edge_uploads += 1
 

@@ -33,6 +33,7 @@ from repro.core import (
     open_session,
 )
 from repro.graph import GraphStore, grid_mesh, random_geometric, social_like
+from repro.runtime import telemetry
 from repro.runtime.fault import EXIT_PREEMPTED, Preempted, PreemptionGuard
 
 log = get_logger("repro.diameter")
@@ -85,6 +86,16 @@ def add_engine_mode_argument(ap: argparse.ArgumentParser) -> None:
                          "the graph")
 
 
+def add_telemetry_argument(ap: argparse.ArgumentParser) -> None:
+    """The shared --telemetry-out CLI contract (also used by serve.py)."""
+    ap.add_argument("--telemetry-out", default=None, metavar="DIR",
+                    help="write a span trace (trace.json, loads in "
+                         "ui.perfetto.dev), spans.jsonl and metrics.prom "
+                         "under DIR. Tracing adds zero host syncs: the "
+                         "transfer-equality contracts hold bit-identically "
+                         "with it on (see docs/engine.md, Telemetry)")
+
+
 def validate_tau(ap: argparse.ArgumentParser, tau) -> None:
     if tau is not None and tau < 1:
         ap.error(f"--tau must be >= 1 (got {tau}); omit it to use the "
@@ -119,6 +130,7 @@ def main() -> int:
     add_cascade_arguments(ap)
     add_autotune_argument(ap)
     add_engine_mode_argument(ap)
+    add_telemetry_argument(ap)
     ap.add_argument("--variant", default="stop", choices=["stop", "complete"])
     ap.add_argument("--delta-init", default="avg")
     ap.add_argument("--cluster2", action="store_true")
@@ -193,63 +205,82 @@ def main() -> int:
     # GraphStore's prebuilt slab/halo layout to the DistributedEngine)
 
     guard = PreemptionGuard() if args.checkpoint_dir else None
-    sess = open_session(g if store is None else None, cfg,
-                        tau=args.tau, tau_solve=args.tau_solve,
-                        autotune=args.autotune, store=store,
-                        checkpoint_dir=args.checkpoint_dir,
-                        resume=args.resume, guard=guard)
-    if sess.tuning is not None:
-        t = sess.tuning
-        log.info("autotuned: tau=%d tau_solve=%d levels=%d delta0=%d "
-                 "tiling=(%d,%d) fuse=%d", t.tau, t.tau_solve, t.levels,
-                 t.delta_init, t.node_tile, t.edge_block, t.fuse)
-    if args.levels > 0:
-        estimator = CascadeEstimator(levels=args.levels)
-    elif sess.tuning is not None:
-        estimator = None  # session default: tuned cascade depth
-    else:
-        estimator = ClusterQuotientEstimator()
-    try:
-        with (guard if guard is not None else contextlib.nullcontext()):
-            est = sess.estimate(estimator)
-    except Preempted as p:
-        log.warning("preempted at stage %d; checkpoint durable at %s — "
-                    "rerun with --resume to finish byte-identically",
-                    p.stage, p.path)
-        return EXIT_PREEMPTED
-    log.info("Phi_approx = %d  (quotient %d + 2 x radius %d)  "
-             "clusters=%d stages=%d growing_steps=%d connected=%s  %.2fs",
-             est.phi_approx, est.phi_quotient, est.radius, est.n_clusters,
-             est.n_stages, est.growing_steps, est.connected, est.seconds)
-    if est.pipeline is not None:
-        pm = est.pipeline
-        log.info("pipeline host syncs: %d total (decompose %d + finalize %d "
-                 "+ quotient %d + solve %d); solve supersteps=%d q_edges=%d",
-                 pm.total_host_syncs, pm.decompose_syncs, pm.finalize_syncs,
-                 pm.quotient_syncs, pm.solve_syncs, pm.solve_supersteps,
-                 pm.n_quotient_edges)
-        if pm.cascade_levels:
-            log.info("cascade: %d extra levels, clusters per level %s, "
-                     "supersteps per level %s, syncs per level %s",
-                     pm.cascade_levels, pm.level_clusters,
-                     pm.level_supersteps, pm.level_syncs)
+    # --telemetry-out arms the span tracer for the whole session lifetime
+    # (open/pack, decomposition stages, quotient, solve); the estimators'
+    # spans no-op when it is absent
+    tracer = telemetry.Tracer() if args.telemetry_out else None
+    tele_cm = (telemetry.tracing(tracer) if tracer is not None
+               else contextlib.nullcontext())
+    with tele_cm:
+        sess = open_session(g if store is None else None, cfg,
+                            tau=args.tau, tau_solve=args.tau_solve,
+                            autotune=args.autotune, store=store,
+                            checkpoint_dir=args.checkpoint_dir,
+                            resume=args.resume, guard=guard)
+        if sess.tuning is not None:
+            t = sess.tuning
+            log.info("autotuned: tau=%d tau_solve=%d levels=%d delta0=%d "
+                     "tiling=(%d,%d) fuse=%d", t.tau, t.tau_solve, t.levels,
+                     t.delta_init, t.node_tile, t.edge_block, t.fuse)
+        if args.levels > 0:
+            estimator = CascadeEstimator(levels=args.levels)
+        elif sess.tuning is not None:
+            estimator = None  # session default: tuned cascade depth
+        else:
+            estimator = ClusterQuotientEstimator()
+        try:
+            with (guard if guard is not None else contextlib.nullcontext()):
+                est = sess.estimate(estimator)
+        except Preempted as p:
+            log.warning("preempted at stage %d; checkpoint durable at %s — "
+                        "rerun with --resume to finish byte-identically",
+                        p.stage, p.path)
+            return EXIT_PREEMPTED
+        log.info("Phi_approx = %d  (quotient %d + 2 x radius %d)  "
+                 "clusters=%d stages=%d growing_steps=%d connected=%s  %.2fs",
+                 est.phi_approx, est.phi_quotient, est.radius, est.n_clusters,
+                 est.n_stages, est.growing_steps, est.connected, est.seconds)
+        if est.pipeline is not None:
+            pm = est.pipeline
+            log.info("pipeline host syncs: %d total (decompose %d + finalize "
+                     "%d + quotient %d + solve %d); solve supersteps=%d "
+                     "q_edges=%d",
+                     pm.total_host_syncs, pm.decompose_syncs,
+                     pm.finalize_syncs, pm.quotient_syncs, pm.solve_syncs,
+                     pm.solve_supersteps, pm.n_quotient_edges)
+            if pm.cascade_levels:
+                log.info("cascade: %d extra levels, clusters per level %s, "
+                         "supersteps per level %s, syncs per level %s",
+                         pm.cascade_levels, pm.level_clusters,
+                         pm.level_supersteps, pm.level_syncs)
 
-    if args.compare_sssp:
-        # same resident session: the competitor re-uses the device buffers
-        sssp = sess.estimate(DeltaSteppingEstimator(seed=args.seed))
-        # phi_approx (= 2 ecc) stays an int even when upper is dropped on
-        # disconnected inputs
-        log.info("SSSP-BF: lower=%d 2xecc=%d supersteps=%d connected=%s  "
-                 "(CLUSTER rounds: %d -> %.1fx fewer)",
-                 sssp.lower, sssp.phi_approx, sssp.growing_steps,
-                 sssp.connected, est.growing_steps,
-                 sssp.growing_steps / max(est.growing_steps, 1))
-    if args.interval:
-        iv = sess.estimate(IntervalEstimator())
-        log.info("certified bracket: diameter in [%d, %d] connected=%s "
-                 "(merged host syncs=%d) %.2fs", iv.lower, iv.upper,
-                 iv.connected, iv.pipeline.total_host_syncs, iv.seconds)
-    log.info("session metrics: %s", sess.metrics)
+        if args.compare_sssp:
+            # same resident session: the competitor re-uses the device
+            # buffers
+            sssp = sess.estimate(DeltaSteppingEstimator(seed=args.seed))
+            # phi_approx (= 2 ecc) stays an int even when upper is dropped
+            # on disconnected inputs
+            log.info("SSSP-BF: lower=%d 2xecc=%d supersteps=%d connected=%s  "
+                     "(CLUSTER rounds: %d -> %.1fx fewer)",
+                     sssp.lower, sssp.phi_approx, sssp.growing_steps,
+                     sssp.connected, est.growing_steps,
+                     sssp.growing_steps / max(est.growing_steps, 1))
+        if args.interval:
+            iv = sess.estimate(IntervalEstimator())
+            log.info("certified bracket: diameter in [%d, %d] connected=%s "
+                     "(merged host syncs=%d) %.2fs", iv.lower, iv.upper,
+                     iv.connected, iv.pipeline.total_host_syncs, iv.seconds)
+        log.info("session metrics: %s", sess.metrics)
+        if args.telemetry_out:
+            registry = telemetry.MetricsRegistry()
+            if est.pipeline is not None:
+                registry.ingest(est.pipeline, "pipeline")
+            registry.ingest(sess.metrics, "session")
+            written = telemetry.write_telemetry(args.telemetry_out, tracer,
+                                                registry)
+            log.info("telemetry: %d spans, %d measured transfers attributed "
+                     "-> %s", len(tracer.spans), tracer.total_transfers(),
+                     sorted(written.values()))
     return 0
 
 

@@ -24,7 +24,6 @@ the first statements in the file, which PEP 236 forbids to combine.)
 import argparse
 import json
 import sys
-import time
 import traceback
 
 import jax
@@ -34,6 +33,7 @@ from repro.config.registry import get_arch
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import all_cells, build_cell
 from repro.runtime.roofline import analyze
+from repro.runtime.telemetry import clock
 
 RESULTS = "/root/repo/results/dryrun.jsonl"
 
@@ -42,7 +42,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_path: str,
              smoke: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-    t0 = time.time()
+    t0 = clock()
     cell = build_cell(arch, shape, mesh, smoke=smoke)
     with mesh:
         jitted = jax.jit(
@@ -51,9 +51,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_path: str,
             donate_argnums=cell.donate,
         )
         lowered = jitted.lower(*cell.arg_specs)
-        t_lower = time.time() - t0
+        t_lower = clock() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = clock() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     rep = analyze(f"{arch}/{shape}", lowered, compiled, n_chips,
@@ -90,7 +90,7 @@ def run_engine(multi_pod: bool, out_path: str) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     cell = build_cell("paper-graph", "", mesh)
-    t0 = time.time()
+    t0 = clock()
     with mesh:
         lowered = jax.jit(cell.step_fn).lower(*cell.arg_specs)
         compiled = lowered.compile()
@@ -98,7 +98,7 @@ def run_engine(multi_pod: bool, out_path: str) -> dict:
     row = rep.row()
     row.update({
         "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
-        "multi_pod": multi_pod, "compile_s": round(time.time() - t0, 1),
+        "multi_pod": multi_pod, "compile_s": round(clock() - t0, 1),
         "note": cell.note, "ok": True,
     })
     print("memory_analysis:", compiled.memory_analysis())

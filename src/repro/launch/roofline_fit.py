@@ -28,7 +28,6 @@ import argparse
 import dataclasses
 import json
 import sys
-import time
 
 import jax
 import numpy as np
@@ -41,6 +40,7 @@ from repro.launch.steps import _lm_model_flops, all_cells, build_cell
 from repro.runtime.roofline import (
     HBM_BW, ICI_BW, PEAK_FLOPS, analyze, parse_collectives,
 )
+from repro.runtime.telemetry import clock
 
 RESULTS = "/root/repo/results/roofline.jsonl"
 
@@ -113,7 +113,7 @@ def fit_lm_cell(arch, shape_name, mesh, multi_pod, out_path):
     L_full = cfg.n_layers
     attn_ops.UNROLL_KV_SCAN = True
     try:
-        t0 = time.time()
+        t0 = clock()
         f2 = _measure(arch, shape, mesh, _probe_cfg(cfg, 2))
         f4 = _measure(arch, shape, mesh, _probe_cfg(cfg, 4))
     finally:
@@ -158,7 +158,7 @@ def fit_lm_cell(arch, shape_name, mesh, multi_pod, out_path):
         "useful_ratio": round(model_flops / flops, 3) if flops else 0.0,
         "roofline_frac": round(
             (model_flops / (n_chips * PEAK_FLOPS)) / bound, 3) if bound else 0,
-        "probe_s": round(time.time() - t0, 1),
+        "probe_s": round(clock() - t0, 1),
         "coll_counts_probe_L4": f4[3],
     }
     print(json.dumps(row), flush=True)

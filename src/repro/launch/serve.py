@@ -21,7 +21,6 @@ from __future__ import annotations
 import argparse
 import contextlib
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +29,7 @@ import numpy as np
 from repro.common import bench_engine_path, get_logger
 from repro.config.registry import get_arch
 from repro.models import transformer as tf_mod
+from repro.runtime import telemetry
 from repro.runtime.fault import EXIT_PREEMPTED, Preempted, PreemptionGuard
 
 log = get_logger("repro.serve")
@@ -157,7 +157,15 @@ def serve_graph_diameter(args) -> int:
     # would pad to different sizes and recompile)
     e_pad = next_multiple(max(g.n_edges for g in graphs) or 1,
                           pool.edge_bucket)
-    with pool:
+    # --telemetry-out arms the span tracer (zero host syncs: span
+    # attribution is meter-stack bookkeeping, never a jax transfer — the
+    # --sync-budget contract below holds bit-identically with it on) and
+    # a registry fed per-estimator latency histograms by the query loop
+    tracer = telemetry.Tracer() if args.telemetry_out else None
+    registry = telemetry.MetricsRegistry() if args.telemetry_out else None
+    tele_cm = (telemetry.tracing(tracer) if tracer is not None
+               else contextlib.nullcontext())
+    with tele_cm, pool:
         sessions = [pool.open(g, tau=args.tau, e_pad=e_pad) for g in graphs]
         if args.preempt_after:
             # TEST HOOK (kill-and-resume smoke): real SIGTERM at this stage
@@ -176,13 +184,15 @@ def serve_graph_diameter(args) -> int:
         update_lines: list[tuple] = []
         from repro.analysis import guard
 
-        t0 = time.perf_counter()
+        t0 = telemetry.clock()
         cold: list[float] = []  # first query per session (session 0 compiles)
         warm: list[float] = []
         try:
             with (pguard if pguard is not None
                   else contextlib.nullcontext()), \
-                    guard.measured_transfers() as meter:
+                    guard.measured_transfers() as meter, \
+                    telemetry.span("serve.replay", batch=args.batch,
+                                   queries=args.queries, estimator=est_name):
                 for round_idx in range(args.queries):
                     if round_idx == 1:
                         # the SessionMetrics contract: from here on, NOTHING
@@ -196,15 +206,26 @@ def serve_graph_diameter(args) -> int:
                         # are mutated IN PLACE)
                         for i, sess in enumerate(sessions):
                             if round_idx - 1 < len(traces[i]):
-                                rep = sess.apply_updates(
-                                    traces[i][round_idx - 1])
+                                with telemetry.span("serve.update", graph=i,
+                                                    batch=round_idx - 1):
+                                    rep = sess.apply_updates(
+                                        traces[i][round_idx - 1])
                                 update_lines.append((i, round_idx - 1, rep))
                     for i, sess in enumerate(sessions):
-                        tq = time.perf_counter()
-                        res = sess.estimate(estimator)
-                        dt = time.perf_counter() - tq
+                        tq = telemetry.clock()
+                        with telemetry.span("serve.query", graph=i,
+                                            round=round_idx) as qs:
+                            res = sess.estimate(estimator)
+                            syncs = _query_syncs(res)
+                            qs.set(host_syncs=syncs)
+                        dt = telemetry.clock() - tq
                         (cold if round_idx == 0 else warm).append(dt)
-                        syncs = _query_syncs(res)
+                        if registry is not None:
+                            kind = "cold" if round_idx == 0 else "warm"
+                            registry.observe(
+                                f"serve.latency.{est_name}", dt)
+                            registry.observe(
+                                f"serve.latency.{est_name}.{kind}", dt)
                         worst_syncs = max(worst_syncs, syncs)
                         records.append((i, round_idx, res, syncs, dt))
         except Preempted as p:
@@ -212,7 +233,7 @@ def serve_graph_diameter(args) -> int:
                         "rerun with --resume to finish byte-identically",
                         p.stage, p.path)
             return EXIT_PREEMPTED
-        total = time.perf_counter() - t0
+        total = telemetry.clock() - t0
 
         for i, u_idx, rep in update_lines:
             log.info("graph[%d] u%d: %s sweeps=%d dead=%d", i, u_idx,
@@ -281,6 +302,18 @@ def serve_graph_diameter(args) -> int:
         if sync_budget is not None and worst_syncs > sync_budget:
             failures.append(f"host syncs {worst_syncs} exceed the recorded "
                             f"bench budget {sync_budget}")
+        if args.telemetry_out:
+            registry.ingest(m, "session")
+            registry.ingest(meter, "serve.transfers")
+            for i, sess in enumerate(sessions):
+                dyn = getattr(sess, "dynamic", None)
+                if dyn is not None:
+                    registry.ingest(dyn.metrics, f"dynamic.g{i}")
+            written = telemetry.write_telemetry(
+                args.telemetry_out, tracer, registry)
+            log.info("telemetry: %d spans, %d measured transfers attributed "
+                     "-> %s", len(tracer.spans), tracer.total_transfers(),
+                     sorted(written.values()))
     for f in failures:
         log.error("FAIL: %s", f)
     return 1 if failures else 0
@@ -301,14 +334,16 @@ def main() -> int:
     from repro.launch.diameter import (add_autotune_argument,
                                        add_cascade_arguments,
                                        add_engine_mode_argument,
-                                       add_tau_argument, validate_cascade,
-                                       validate_tau)
+                                       add_tau_argument,
+                                       add_telemetry_argument,
+                                       validate_cascade, validate_tau)
 
     ap.add_argument("--graph-n", type=int, default=2000)
     add_tau_argument(ap)
     add_cascade_arguments(ap)
     add_autotune_argument(ap)
     add_engine_mode_argument(ap)
+    add_telemetry_argument(ap)
     ap.add_argument("--backend", default="single",
                     choices=["single", "sharded", "pallas"])
     ap.add_argument("--queries", type=int, default=2,
@@ -381,15 +416,15 @@ def main() -> int:
 
     # prefill by streaming the prompt through decode (keeps ONE compiled
     # step; a production server would batch-prefill via forward())
-    t0 = time.time()
+    t0 = telemetry.clock()
     logits = None
     for i in range(args.prompt_len):
         logits, cache = decode(params, cache, prompts[:, i:i+1])
     jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    t_prefill = telemetry.clock() - t0
 
     toks = []
-    t0 = time.time()
+    t0 = telemetry.clock()
     cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     for i in range(args.gen):
         toks.append(cur)
@@ -401,7 +436,7 @@ def main() -> int:
         else:
             cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     jax.block_until_ready(logits)
-    t_decode = time.time() - t0
+    t_decode = telemetry.clock() - t0
 
     out = np.asarray(jnp.concatenate(toks, axis=1))  # sync: one post-loop fetch of all decoded ids
     log.info("prefill %.2fs (%.1f tok/s)  decode %.2fs (%.1f tok/s/seq)",

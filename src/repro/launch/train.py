@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 from functools import partial
 
 import jax
@@ -30,6 +29,7 @@ from repro.optim import adamw
 from repro.runtime import sharding as shrules
 from repro.runtime.compression import ef_compress_grads, init_residual
 from repro.runtime.fault import PreemptionGuard, StragglerMonitor
+from repro.runtime.telemetry import clock
 
 log = get_logger("repro.train")
 
@@ -97,7 +97,7 @@ def main() -> int:
         return params, opt, loss, stats, residual
 
     mon = StragglerMonitor()
-    t_start = time.time()
+    t_start = clock()
     with PreemptionGuard() as guard, mesh:
         while cursor.step < args.steps:
             batch_np = pipe.batch(cursor)
@@ -126,7 +126,7 @@ def main() -> int:
                             cursor.step)
                 return 0
     log.info("done: %d steps in %.1fs; stragglers flagged: %s",
-             args.steps, time.time() - t_start, mon.flagged)
+             args.steps, clock() - t_start, mon.flagged)
     return 0
 
 

@@ -314,7 +314,7 @@ class TestDeterminismLint:
         """)
         assert codes(bad) == ["DET001"] and good == []
 
-    def test_wall_clock_flagged_only_in_decomp_modules(self):
+    def test_wall_clock_flagged_in_clocked_scope(self):
         snippet = """
             import time
 
@@ -323,6 +323,12 @@ class TestDeterminismLint:
         """
         assert codes(lint(determinism_lint, snippet,
                           path=DECOMP_PATH)) == ["DET002"]
+        # every repro module is in scope, not just the decomp set...
+        assert codes(lint(determinism_lint, snippet,
+                          path="src/repro/launch/serve.py")) == ["DET002"]
+        # ...except the sanctioned clock seam itself and non-repro files
+        assert lint(determinism_lint, snippet,
+                    path="src/repro/runtime/telemetry.py") == []
         assert lint(determinism_lint, snippet, path="bench.py") == []
 
     def test_set_iteration_order_flagged_in_decomp_modules(self):
